@@ -1,0 +1,223 @@
+"""Cluster timing model for the paper's training-side experiments.
+
+This container cannot measure TPU wall time, so the training benchmarks
+reproduce the paper's *mechanism* with an event-driven two-resource model
+(one compute stream, one network link per device — the same abstraction as
+paper Figs. 7/8) driven by byte/FLOP counts from the model configs and the
+v5e constants.  Schedules:
+
+  baseline             allreduce launches when ready; overlapping transfers
+                       FAIR-SHARE the link (paper Fig. 5/7a)
+  priority             whole-tensor ops; a2a never shares, but cannot
+                       preempt an in-flight allreduce (Fig. 7b)
+  +partition           allreduce split into uniform micro-ops that yield at
+                       chunk boundaries (Fig. 8a)
+  +partition+pipeline  a2a also chunked; expert FFN overlaps the a2a
+                       micro-ops (Fig. 8b)
+  fixed                allreduce deferred to after each MoE layer's second
+                       a2a, unpartitioned (Fig. 7c)
+
+The same model yields per-layer a2a times for inference (Fig. 16-18) where
+the per-device token load comes from the placement plan.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+from repro.configs.base import HardwareConfig, V5E
+
+
+@dataclass
+class MoEStepModel:
+    """Byte/FLOP counts for ONE training step of an MoE model."""
+    n_moe_layers: int
+    a2a_bytes: float          # one a2a op, per device (dispatch or combine)
+    ffn_flops: float          # expert FFN per device per layer (one pass)
+    attn_flops: float         # non-MoE backward compute per layer per device
+    grad_bytes: float         # DP-allreduce bytes per layer (non-expert)
+    embed_grad_bytes: float = 0.0   # embedding gradient (one big bucket,
+    #                                 ready at the very end of backward)
+    bucket_layers: int = 4    # DDP-style fusion: layers per allreduce bucket
+    hw: HardwareConfig = V5E
+
+    @property
+    def link_bw(self):
+        return self.hw.ici_bw * self.hw.ici_links
+
+    def a2a_time(self):
+        return self.a2a_bytes / self.link_bw
+
+    def ffn_time(self):
+        return self.ffn_flops / (self.hw.peak_flops * self.hw.sim_efficiency)
+
+    def attn_time(self):
+        return self.attn_flops / (self.hw.peak_flops * self.hw.sim_efficiency)
+
+    def ar_time(self, bytes_=None):
+        return (self.grad_bytes if bytes_ is None else bytes_) / self.link_bw
+
+
+def simulate_backward(m: MoEStepModel, schedule: str = "baseline",
+                      n_microops: int = 4, partition_bytes: float = 30e6
+                      ) -> dict:
+    """Simulate the backward pass of all MoE layers.
+
+    Per layer (backward order): combine-a2a -> expert FFN bwd -> dispatch-
+    a2a -> attention bwd compute; the layer's gradient allreduce becomes
+    ready after its compute.  Returns step-time components.
+    """
+    t_net = 0.0      # network stream frontier
+    t_cmp = 0.0      # compute stream frontier
+    ar_queue: List[float] = []    # pending allreduce bytes (chunks)
+    a2a = m.a2a_time()
+    ffn = m.ffn_time() * 2.0      # bwd ~ 2x fwd FLOPs
+    attn = m.attn_time() * 2.0
+    a2a_slow = 0.0
+    a2a_total = 0.0
+
+    def drain_ar(until: float, t_net: float) -> float:
+        """Work-conserving: run queued AR ops while the network is free
+        before `until`.  An op started just before an a2a arrives cannot be
+        preempted (§4.1) — whole tensors overshoot badly (Fig. 7b), small
+        micro-ops by at most one chunk (Fig. 8a).  That overshoot is the
+        entire difference priority-vs-partition measures."""
+        while ar_queue and t_net < until:
+            dur = ar_queue.pop(0) / m.link_bw
+            t_net = t_net + dur
+        return t_net
+
+    def chunks_of(nbytes: float) -> List[float]:
+        if schedule in ("priority+partition", "priority+partition+pipeline",
+                        "baseline-partition"):
+            n = max(1, int(round(nbytes / partition_bytes)))
+            return [nbytes / n] * n
+        return [nbytes]
+
+    bucket_acc = 0.0
+    for layer in range(m.n_moe_layers):
+        # ---- combine a2a (first a2a of backward) -------------------------
+        for direction in (0, 1):
+            ready = t_cmp
+            if schedule == "baseline":
+                # fair share with any pending AR
+                pending = sum(ar_queue)
+                ar_queue.clear()
+                start = max(t_net, ready)
+                both = min(pending, m.a2a_bytes)   # overlap portion
+                dur = (m.a2a_bytes + both) / m.link_bw  # fair-share slowdown
+                t_net = start + dur + max(0.0, (pending - both)) / m.link_bw
+                a2a_end = start + dur
+            elif schedule == "fixed":
+                start = max(t_net, ready)
+                a2a_end = start + a2a
+                t_net = a2a_end
+            else:
+                t_net = drain_ar(ready, t_net)
+                start = max(t_net, ready)
+                a2a_end = start + a2a
+                t_net = a2a_end
+            a2a_slow += (a2a_end - max(start, ready)) - a2a
+            a2a_total += a2a_end - max(start, ready)
+            if direction == 0:
+                # expert FFN backward between the two a2a ops
+                if schedule == "priority+partition+pipeline":
+                    # chunked a2a overlaps FFN: critical path a2a + ffn/n
+                    t_cmp = a2a_end + ffn / n_microops
+                else:
+                    t_cmp = a2a_end + ffn
+            else:
+                t_cmp = max(t_cmp, a2a_end) + attn
+        # ---- layer gradients ready -> allreduce --------------------------
+        # Lina partitions per-tensor; the baseline/priority modes see DDP
+        # bucketing (several layers fused into one large op, §4.1)
+        bucket_acc += m.grad_bytes
+        flush_bucket = ((layer + 1) % max(m.bucket_layers, 1) == 0
+                        or layer == m.n_moe_layers - 1)
+        if schedule == "fixed":
+            # launch whole bucket now (after second a2a)
+            if flush_bucket:
+                t_net = max(t_net, t_cmp) + m.ar_time(bucket_acc)
+                bucket_acc = 0.0
+        elif schedule in ("priority+partition",
+                          "priority+partition+pipeline"):
+            # tensor partitioning: no bucketing, uniform micro-ops per layer
+            ar_queue.extend(chunks_of(m.grad_bytes))
+            bucket_acc = 0.0
+            t_net = drain_ar(t_cmp, t_net)
+        else:
+            if flush_bucket:
+                ar_queue.append(bucket_acc)
+                bucket_acc = 0.0
+            if schedule != "baseline":
+                t_net = drain_ar(t_cmp, t_net)
+
+    # the embedding gradient lands last (one big bucket)
+    if m.embed_grad_bytes:
+        ar_queue.extend(chunks_of(m.embed_grad_bytes))
+
+    # flush remaining allreduce (blocks the optimizer step)
+    while ar_queue:
+        t_net = max(t_net, t_cmp) if t_net < t_cmp else t_net
+        t_net += ar_queue.pop(0) / m.link_bw
+    step_end = max(t_cmp, t_net)
+    return {
+        "step_time": step_end,
+        "a2a_time_total": a2a_total,
+        "a2a_slowdown": a2a_slow,
+        "compute_end": t_cmp,
+        "net_end": t_net,
+    }
+
+
+def simulate_step(m: MoEStepModel, schedule: str = "baseline",
+                  n_microops: int = 4, partition_bytes: float = 30e6) -> dict:
+    """Full step = forward (2 a2a + FFN + attention per layer, no
+    contention: allreduce only exists in backward) + the simulated backward."""
+    a2a = m.a2a_time()
+    if schedule == "priority+partition+pipeline":
+        ffn_fwd = m.ffn_time() / n_microops   # pipelined behind chunked a2a
+    else:
+        ffn_fwd = m.ffn_time()
+    fwd = m.n_moe_layers * (2 * a2a + ffn_fwd + m.attn_time())
+    bwd = simulate_backward(m, schedule, n_microops, partition_bytes)
+    return {
+        "step_time": fwd + bwd["step_time"],
+        "a2a_time_total": bwd["a2a_time_total"] + m.n_moe_layers * 2 * a2a,
+        "fwd_time": fwd,
+        "bwd": bwd,
+    }
+
+
+def step_model_for(cfg, seq_len: int, global_batch: int, n_devices: int,
+                   experts_per_device: int = 1, hw: HardwareConfig = V5E
+                   ) -> MoEStepModel:
+    """Derive the per-device byte/FLOP counts from a ModelConfig."""
+    e = cfg.moe.n_experts
+    ep = max(1, e // experts_per_device)
+    tokens_dev = global_batch * seq_len / max(n_devices, 1)
+    d = cfg.d_model
+    f_exp = cfg.moe.d_ff or cfg.d_ff
+    ffn_mult = 3 if cfg.ffn_type == "swiglu" else 2
+    k = max(cfg.moe.top_k, 1)
+    a2a_bytes = tokens_dev * k * d * 2 * (ep - 1) / max(ep, 1)
+    ffn_flops = 2 * tokens_dev * k * d * f_exp * ffn_mult
+    hd = cfg.resolved_head_dim
+    attn_params = 2 * d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd
+    # per-layer non-MoE compute: projections + S^2 attention (causal) +
+    # the model head amortized across layers
+    attn_flops = 2 * tokens_dev * attn_params \
+        + 2 * 2 * tokens_dev * (seq_len / 2) * cfg.n_heads * hd \
+        + 2 * tokens_dev * d * cfg.vocab_size / max(cfg.n_layers, 1)
+    # non-expert grads: attention + norms (+ dense FFN layers if interleaved)
+    non_expert_per_layer = attn_params + 2 * d
+    grad_bytes = non_expert_per_layer * 4  # fp32 gradient allreduce
+    return MoEStepModel(
+        n_moe_layers=cfg.n_moe_layers,
+        a2a_bytes=a2a_bytes,
+        ffn_flops=ffn_flops,
+        attn_flops=attn_flops,
+        grad_bytes=grad_bytes,
+        embed_grad_bytes=cfg.vocab_size * d * 4,
+        hw=hw,
+    )

@@ -1,0 +1,48 @@
+"""Inference-side timing model (paper Figs. 16-18, Table 5).
+
+Per MoE layer the end-to-end time is bounded by the *most loaded* device
+(paper §2.2: tokens to less-popular experts wait for the stragglers):
+
+  t_layer = gate + a2a(max link) + FFN(max device tokens) + a2a + sched
+
+where device loads come from the PlacementPlan and the scheduler overhead
+follows the paper's §7.3.1 measurements (phase-1 overlapped; phase-2
+blocking when fine-tuning triggers).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import HardwareConfig, V5E
+
+PHASE2_CHECK_S = 1.45e-3     # paper: resume-signal path
+PHASE2_REPLAN_S = 6.2e-3     # paper: full re-schedule path
+
+
+@dataclass(frozen=True)
+class InferenceLayerModel:
+    d_model: int
+    d_ff: int
+    ffn_mult: int
+    n_devices: int
+    hw: HardwareConfig = V5E
+
+    def layer_time(self, n_tokens: int, max_load_share: float,
+                   finetuned: bool = False, lina: bool = True,
+                   post_gate_schedule: bool = False) -> float:
+        max_tok = n_tokens * max_load_share
+        ffn = 2.0 * max_tok * self.d_model * self.d_ff * self.ffn_mult \
+            / (self.hw.peak_flops * self.hw.sim_efficiency)
+        link = self.hw.ici_bw * self.hw.ici_links
+        a2a = 2.0 * max_tok * self.d_model * 2 / link   # both directions
+        t = ffn + a2a
+        if lina:
+            t += PHASE2_REPLAN_S if finetuned else PHASE2_CHECK_S
+        if post_gate_schedule:
+            # scheduling only after gating blocks every layer (paper's
+            # 'w/o estimation' ablation, §7.3.1)
+            t += PHASE2_REPLAN_S
+        return t
+
+    def ideal_time(self, n_tokens: int) -> float:
+        return self.layer_time(n_tokens, 1.0 / self.n_devices, lina=False)

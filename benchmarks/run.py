@@ -1,0 +1,52 @@
+"""Benchmark harness: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig16]
+
+Prints ``name,us_per_call,derived`` CSV.  ``us_per_call`` is a measured CPU
+wall time of the corresponding smoke-scale code path (0.0 for pure-model
+rows); ``derived`` is the v5e-modelled quantity the paper reports (see
+benchmarks/commmodel.py and benchmarks/inference_model.py for methodology).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def all_benchmarks():
+    from benchmarks import train_side, infer_side
+    return [
+        ("table1", train_side.table1_a2a_fraction),
+        ("fig10", train_side.fig10_training_speedup),
+        ("fig14", train_side.fig14_design_ablation),
+        ("fig15", train_side.fig15_partition_size),
+        ("table3", train_side.table3_packing),
+        ("fig16", infer_side.fig16_inference_time),
+        ("table5", infer_side.table5_path_length),
+        ("fig19", infer_side.fig19_estimation_accuracy),
+    ]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    for name, fn in all_benchmarks():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # noqa: BLE001 — a failing table must not
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+            continue
+        for rname, us, derived in rows:
+            print(f'{rname},{us:.1f},"{derived}"', flush=True)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Serving scenario: profile expert-selection paths on 'training' data, then
+serve batched requests with Lina's two-phase popularity scheduling, and
+compare against the uniform (DeepSpeed-style) placement.
+
+    PYTHONPATH=src python examples/serve_popularity.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, with_experts, TRANSFORMER_XL
+from repro.data import DataConfig, SyntheticLM
+from repro.models import lm as lm_mod
+from repro.runtime.server import MoEServer, ServerConfig, profile_from_training
+
+
+def main():
+    cfg = with_experts(TRANSFORMER_XL, 16).smoke()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, n_experts=16))
+    params = lm_mod.init_params(cfg, jax.random.PRNGKey(0))
+
+    # induce inference-style skew (paper Fig. 6): a couple of hot experts
+    router = np.array(params.stack.moe.router, np.float32)
+    rng = np.random.RandomState(0)
+    for i in range(router.shape[0]):
+        router[i][:, rng.choice(16, 2, replace=False)] += 2.0
+    params = params._replace(stack=params.stack._replace(
+        moe=params.stack.moe._replace(router=jnp.asarray(router))))
+
+    ds = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
+                                global_batch=4))
+    print("profiling 4 batches ...")
+    prof = profile_from_training(cfg, params,
+                                 (ds.batch(i) for i in range(4)), path_len=3)
+
+    for policy in ("uniform", "lina"):
+        srv = MoEServer(cfg, params, prof,
+                        ServerConfig(path_len=3, schedule_policy=policy))
+        loads, fts, accs = [], [], []
+        for b in range(4):
+            _, stats = srv.serve(ds.batch(100 + b)["tokens"])
+            loads += [s.device_load.max() for s in stats]
+            fts += [s.finetuned for s in stats]
+            accs += [s.est_accurate for s in stats]
+        print(f"{policy:8s}: max-device-load {np.mean(loads):.3f} "
+              f"(ideal {1/16:.3f})  fine-tune {np.mean(fts):.0%}  "
+              f"est-accuracy {np.mean(accs):.0%}")
+
+
+if __name__ == "__main__":
+    main()

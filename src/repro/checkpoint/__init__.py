@@ -1,0 +1,2 @@
+"""Checkpoint substrate: atomic save/restore, keep-k, elastic resharding."""
+from repro.checkpoint.manager import CheckpointManager, save_pytree, load_pytree

@@ -1,0 +1,130 @@
+"""Fault-tolerant checkpointing.
+
+  * atomic: write to <dir>.tmp then rename — a killed job never leaves a
+    half checkpoint that restart would read;
+  * keep-last-k garbage collection;
+  * layout-free storage: leaves are saved as host numpy in the LOGICAL
+    (unsharded) layout plus a treedef manifest, so restore can re-shard to
+    ANY mesh (elastic scaling: save on 1x8, resume on 2x4 — test-verified);
+  * step indexing and 'latest' discovery for automatic restart.
+
+At 1000+ nodes each host would write only its owned shards (the manifest
+format already records per-leaf paths); on this single-host container the
+gather-to-host path exercises the same interface.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "name", getattr(p, "key", getattr(p, "idx", p))))
+                       for p in path)
+        out.append((key, leaf))
+    return out, treedef
+
+
+def save_pytree(tree, directory: str):
+    """Atomic: materialize to host, write npz + manifest, rename."""
+    tmp = directory + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, _ = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = []
+    for i, (key, leaf) in enumerate(flat):
+        name = f"a{i}"
+        arrays[name] = np.asarray(jax.device_get(leaf))
+        manifest.append({"key": key, "name": name,
+                         "dtype": str(arrays[name].dtype),
+                         "shape": list(arrays[name].shape)})
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(directory):
+        shutil.rmtree(directory)
+    os.rename(tmp, directory)
+
+
+def load_pytree(directory: str, like, shardings=None):
+    """Restore into the structure of ``like``; optionally device_put with
+    ``shardings`` (a pytree of NamedSharding) — elastic resharding happens
+    here, on load, regardless of the mesh the checkpoint was written on."""
+    z = np.load(os.path.join(directory, "arrays.npz"))
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    def restore_dtype(arr, want: str):
+        # np.savez stores ml_dtypes (bfloat16, float8_*) as raw void bytes;
+        # the manifest remembers the true dtype — reinterpret on load.
+        if str(arr.dtype) != want:
+            import jax.numpy as jnp
+            arr = arr.view(jnp.dtype(want))
+        return arr
+
+    by_key = {m["key"]: restore_dtype(z[m["name"]], m["dtype"])
+              for m in manifest}
+    flat, treedef = _flatten_with_paths(like)
+    leaves = []
+    for key, leaf in flat:
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = by_key[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "
+                             f"vs model {leaf.shape}")
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda a, s: jax.device_put(a, s) if s is not None else jax.device_put(a),
+            tree, shardings)
+    return tree
+
+
+class CheckpointManager:
+    def __init__(self, root: str, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def steps(self):
+        out = []
+        for d in os.listdir(self.root):
+            m = re.fullmatch(r"step_(\d+)", d)
+            if m and os.path.exists(os.path.join(self.root, d,
+                                                 "manifest.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def save(self, step: int, state: Any):
+        save_pytree(state, self._dir(step))
+        for old in self.steps()[: -self.keep]:
+            shutil.rmtree(self._dir(old), ignore_errors=True)
+
+    def restore(self, step: int, like: Any, shardings=None):
+        return load_pytree(self._dir(step), like, shardings)
+
+    def restore_latest(self, like: Any, shardings=None):
+        s = self.latest_step()
+        if s is None:
+            return None, None
+        return s, self.restore(s, like, shardings)

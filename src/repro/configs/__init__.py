@@ -1,0 +1,42 @@
+"""Architecture registry: ``get_config(name)`` / ``--arch <id>``."""
+from repro.configs.base import (
+    ModelConfig, MoEConfig, SSMConfig, ShapeConfig, HardwareConfig,
+    SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K, V5E,
+    applicable_shapes, skip_reason,
+)
+
+from repro.configs.granite_34b import CONFIG as GRANITE_34B
+from repro.configs.qwen3_8b import CONFIG as QWEN3_8B
+from repro.configs.qwen1_5_0_5b import CONFIG as QWEN1_5_0_5B
+from repro.configs.qwen2_72b import CONFIG as QWEN2_72B
+from repro.configs.llava_next_34b import CONFIG as LLAVA_NEXT_34B
+from repro.configs.llama4_maverick_400b_a17b import CONFIG as LLAMA4_MAVERICK
+from repro.configs.mixtral_8x22b import CONFIG as MIXTRAL_8X22B
+from repro.configs.zamba2_1_2b import CONFIG as ZAMBA2_1_2B
+from repro.configs.rwkv6_1_6b import CONFIG as RWKV6_1_6B
+from repro.configs.hubert_xlarge import CONFIG as HUBERT_XLARGE
+from repro.configs.paper_models import (
+    TRANSFORMER_XL, GPT2_MOE, BERT2GPT2, BERT_LARGE, with_experts,
+)
+
+ASSIGNED = [
+    GRANITE_34B, QWEN3_8B, QWEN1_5_0_5B, QWEN2_72B, LLAVA_NEXT_34B,
+    LLAMA4_MAVERICK, MIXTRAL_8X22B, ZAMBA2_1_2B, RWKV6_1_6B, HUBERT_XLARGE,
+]
+PAPER = [TRANSFORMER_XL, GPT2_MOE, BERT2GPT2, BERT_LARGE]
+
+REGISTRY = {c.name: c for c in ASSIGNED + PAPER}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name.endswith("-smoke"):
+        return get_config(name[: -len("-smoke")]).smoke()
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(REGISTRY)}") from None
+
+
+def list_archs() -> list:
+    return [c.name for c in ASSIGNED]

@@ -1,0 +1,22 @@
+"""Lina core: the paper's contribution as composable JAX modules.
+
+Training (§4): ``moe.moe_layer`` — expert-parallel MoE with a2a micro-ops
+pipelined against the expert FFN; ``microop.prioritized_chunked_reduce`` —
+gradient reduction micro-ops statically ordered after a2a.
+
+Inference (§5): ``popularity.PathProfile`` — sample-path expert-popularity
+estimation; ``placement.two_phase_plan`` — Eq. 1 + FFD replication/packing;
+``serving.serve_moe_layer`` — plan-aware dispatch.
+"""
+from repro.core.gating import GatingResult, capacity, top_k_gating
+from repro.core.moe import MoEParams, MoEOutput, init_moe_params, moe_layer, expert_ffn
+from repro.core.microop import (
+    chunked_all_to_all, pipelined_expert_ffn, prioritized_chunked_reduce,
+    ordered_after, all_to_all_ec, all_to_all_ec_inverse,
+)
+from repro.core.popularity import PathProfile, rolling_path_id, estimation_accuracy
+from repro.core.placement import (
+    PlacementPlan, plan_placement, identity_plan, needs_finetune, two_phase_plan,
+)
+from repro.core.packing import choose_packing, PackingDecision
+from repro.core.serving import PlanArrays, serve_moe_layer, route_to_slots

@@ -1,0 +1,84 @@
+"""Token dispatch/combine into per-expert capacity buffers.
+
+Two backends with identical semantics:
+  * ``einsum``  — one-hot matmul (GShard reference; O(T*E*C) FLOPs). Oracle.
+  * ``scatter`` — index-based scatter/gather (production; O(T) memory traffic).
+
+Both produce ``[E, C, d]`` dispatch buffers that the expert-parallel a2a
+(``core/microop.py``) exchanges across the `model` mesh axis.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gating import GatingResult
+
+
+# ---------------------------------------------------------------------------
+# einsum backend (oracle)
+# ---------------------------------------------------------------------------
+
+def dispatch_mask(g: GatingResult, n_experts: int, cap: int) -> jax.Array:
+    """[T, k] metadata -> boolean mask [T, E, C]."""
+    e_oh = jax.nn.one_hot(g.expert_idx, n_experts, dtype=jnp.float32)
+    c_oh = jax.nn.one_hot(g.position, cap, dtype=jnp.float32)
+    keep = (~g.dropped).astype(jnp.float32)[..., None, None]
+    return jnp.einsum("tke,tkc->tec", e_oh * keep[..., 0], c_oh * keep[..., 0])
+
+
+def dispatch_einsum(x: jax.Array, g: GatingResult, n_experts: int,
+                    cap: int) -> jax.Array:
+    """x: [T, d] -> buffers [E, C, d]."""
+    mask = dispatch_mask(g, n_experts, cap)
+    return jnp.einsum("tec,td->ecd", mask, x.astype(jnp.float32)).astype(x.dtype)
+
+
+def combine_einsum(buf: jax.Array, g: GatingResult, n_experts: int,
+                   cap: int) -> jax.Array:
+    """buffers [E, C, d] -> [T, d], weighted by gate weights."""
+    e_oh = jax.nn.one_hot(g.expert_idx, n_experts, dtype=jnp.float32)
+    c_oh = jax.nn.one_hot(g.position, cap, dtype=jnp.float32)
+    w = g.gate_weights.astype(jnp.float32)
+    cmb = jnp.einsum("tke,tkc,tk->tec", e_oh, c_oh, w)
+    return jnp.einsum("tec,ecd->td", cmb, buf.astype(jnp.float32)).astype(buf.dtype)
+
+
+# ---------------------------------------------------------------------------
+# scatter backend (production)
+# ---------------------------------------------------------------------------
+
+def dispatch_scatter(x: jax.Array, g: GatingResult, n_experts: int,
+                     cap: int) -> jax.Array:
+    """x: [T, d] -> buffers [E, C, d] via scatter; dropped tokens discarded."""
+    t, d = x.shape
+    k = g.expert_idx.shape[1]
+    flat_slot = g.expert_idx * cap + g.position                    # [T, k]
+    # route dropped tokens to a scratch row appended at the end
+    flat_slot = jnp.where(g.dropped, n_experts * cap, flat_slot)
+    buf = jnp.zeros((n_experts * cap + 1, d), x.dtype)
+    src = jnp.broadcast_to(x[:, None, :], (t, k, d)).reshape(t * k, d)
+    buf = buf.at[flat_slot.reshape(-1)].set(src, mode="drop")
+    return buf[:-1].reshape(n_experts, cap, d)
+
+
+def combine_scatter(buf: jax.Array, g: GatingResult, n_experts: int,
+                    cap: int) -> jax.Array:
+    flat = buf.reshape(n_experts * cap, -1)
+    slot = g.expert_idx * cap + g.position                         # [T, k]
+    slot = jnp.clip(slot, 0, n_experts * cap - 1)
+    gathered = flat[slot]                                          # [T, k, d]
+    w = jnp.where(g.dropped, 0.0, g.gate_weights)[..., None]
+    # combine in the buffer dtype: keeps the BACKWARD a2a cotangents bf16
+    # (an f32 upcast here doubles the dominant collective's wire bytes)
+    return jnp.sum(gathered * w.astype(buf.dtype), axis=1)
+
+
+BACKENDS = {
+    "einsum": (dispatch_einsum, combine_einsum),
+    "scatter": (dispatch_scatter, combine_scatter),
+}
+
+
+def get_backend(name: str):
+    return BACKENDS[name]

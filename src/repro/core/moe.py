@@ -1,0 +1,188 @@
+"""The expert-parallel MoE layer: gating -> dispatch -> (micro-op a2a
+pipelined with expert FFN) -> combine, under ``shard_map`` on the `model`
+mesh axis, with optional Lina inference placement (replication/packing).
+
+This is the module a user drops in place of an FFN (paper Fig. 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import MoEConfig
+from repro.core import dispatch as D
+from repro.core import microop
+from repro.core.gating import GatingResult, capacity, top_k_gating
+
+EP_AXIS = "model"           # expert-parallel mesh axis
+DP_AXES = ("pod", "data")   # data-parallel mesh axes
+
+_DEFAULT_MESH = None
+
+
+def default_mesh():
+    """1-device ('data','model') mesh so the shard_map body (and its
+    collectives) also runs on a bare CPU — used by smoke tests."""
+    global _DEFAULT_MESH
+    if _DEFAULT_MESH is None:
+        _DEFAULT_MESH = jax.make_mesh((1, 1), ("data", "model"))
+    return _DEFAULT_MESH
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array        # [d, E]
+    wi: jax.Array            # [E, d, f]   (gate proj for swiglu)
+    wu: jax.Array | None     # [E, d, f]   (up proj; None for gelu FFN)
+    wo: jax.Array            # [E, f, d]
+
+
+class MoEOutput(NamedTuple):
+    y: jax.Array             # [T, d]
+    aux_loss: jax.Array      # scalar
+    expert_idx: jax.Array    # [T, k] — for popularity profiling/estimation
+    router_probs: jax.Array  # [T, E]
+
+
+def init_moe_params(key, d_model: int, d_ff: int, n_experts: int,
+                    ffn_type: str = "swiglu", dtype=jnp.float32) -> MoEParams:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = d_model ** -0.5
+    s_out = d_ff ** -0.5
+    router = (jax.random.normal(k1, (d_model, n_experts)) * s_in).astype(dtype)
+    wi = (jax.random.normal(k2, (n_experts, d_model, d_ff)) * s_in).astype(dtype)
+    wu = (jax.random.normal(k3, (n_experts, d_model, d_ff)) * s_in).astype(dtype) \
+        if ffn_type == "swiglu" else None
+    wo = (jax.random.normal(k4, (n_experts, d_ff, d_model)) * s_out).astype(dtype)
+    return MoEParams(router, wi, wu, wo)
+
+
+def expert_ffn(wi, wu, wo, x, ffn_type: str = "swiglu"):
+    """x: [E_rows, n, d] with per-row expert weights [E_rows, d, f]."""
+    h = jnp.einsum("end,edf->enf", x, wi)
+    if ffn_type == "swiglu":
+        u = jnp.einsum("end,edf->enf", x, wu)
+        h = jax.nn.silu(h) * u
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("enf,efd->end", h, wo)
+
+
+# ---------------------------------------------------------------------------
+# The shard_map body: everything below runs per-device with explicit
+# collectives — this is where Lina's schedule lives.
+# ---------------------------------------------------------------------------
+
+def _moe_shard_body(x, router, wi, wu, wo, *, cfg: MoEConfig, ffn_type: str,
+                    dispatch_backend: str, ep_axis: str, dp_axes,
+                    lina: bool, fsdp: bool = False, tp_axis: str | None = None,
+                    top_k: int | None = None):
+    """x: [T_local, d].  Expert weights arrive expert-sharded over ep_axis:
+    wi/wu/wo have leading dim E_local = E / ep.  With ``fsdp`` they are
+    additionally sharded over the dp axes on the hidden dim and gathered
+    here, per layer, so the resident footprint stays 1/(ep*dp) of the stack
+    (ZeRO-3 for experts; the per-layer gather overlaps with gating).  With
+    ``tp_axis`` the expert hidden dim stays sharded (expert slicing) and the
+    output projection carries a psum over tp."""
+    if fsdp:
+        wi = lax.all_gather(wi, dp_axes, axis=2, tiled=True)
+        if wu is not None:
+            wu = lax.all_gather(wu, dp_axes, axis=2, tiled=True)
+        wo = lax.all_gather(wo, dp_axes, axis=1, tiled=True)
+    b_loc, s_loc, d_model = x.shape
+    x = x.reshape(b_loc * s_loc, d_model)      # local flatten: no resharding
+    t_local = x.shape[0]
+    e = cfg.n_experts
+    k = top_k or cfg.top_k
+    cap = capacity(t_local, e, k, cfg.capacity_factor)
+
+    logits = x @ router                                           # [T, E]
+    g = top_k_gating(logits, k, cap, cfg.aux_loss_weight)
+
+    disp, comb = D.get_backend(dispatch_backend)
+    buf = disp(x, g, e, cap)                                      # [E, C, d]
+
+    ep = lax.psum(1, ep_axis)
+    e_local = e // ep
+
+    def ffn_rows(rows):                                           # [ep*E_local, c, d]
+        rs = rows.reshape(ep, e_local, rows.shape[1], d_model)
+        rs = rs.transpose(1, 0, 2, 3).reshape(e_local, ep * rows.shape[1], d_model)
+        out = expert_ffn(wi, wu, wo, rs, ffn_type)
+        if tp_axis is not None:
+            out = lax.psum(out, tp_axis)     # contract the tp-sharded hidden
+        out = out.reshape(e_local, ep, rows.shape[1], d_model)
+        return out.transpose(1, 0, 2, 3).reshape(ep * e_local, rows.shape[1], d_model)
+
+    n_chunks = cfg.n_microops if lina else 1
+    out_buf, a2a_token = microop.pipelined_expert_ffn(
+        buf, ffn_rows, ep_axis, n_chunks, e, pipeline=lina and cfg.pipeline_ffn)
+
+    y = comb(out_buf, g, e, cap)                                  # [T, d]
+    y = y.reshape(b_loc, s_loc, d_model)
+    return y, g.aux_loss, g.expert_idx, g.router_probs, a2a_token
+
+
+def moe_layer(mesh, x, params: MoEParams, cfg: MoEConfig, *,
+              ffn_type: str = "swiglu", dispatch_backend: str = "scatter",
+              lina: bool = True, fsdp: bool = False,
+              top_k: int | None = None) -> MoEOutput:
+    """x: [B, S, d].  Experts sharded over `model`; tokens sharded batch-over
+    dp and sequence-over-`model` — the SAME layout sequence parallelism uses
+    between blocks, so entering the MoE region costs no resharding, and each
+    device gates/dispatches only its T/(dp*ep) tokens (replicated over `tp`,
+    whose ranks must see identical tokens for the expert-slicing psum).
+    With ``fsdp``, expert hidden dims are additionally sharded over dp; a
+    `tp` mesh axis tensor-slices the expert hidden dim (expert slicing)."""
+    if mesh is None:
+        mesh = default_mesh()
+    has_pod = "pod" in mesh.axis_names
+    tp = "tp" if "tp" in mesh.axis_names else None
+    dp = ("pod", "data") if has_pod else ("data",)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    b_, s_, _ = x.shape
+    dp_n = 1
+    for a in dp:
+        dp_n *= sizes.get(a, 1)
+    bq = dp if b_ % dp_n == 0 else None
+    sq = "model" if s_ % sizes.get("model", 1) == 0 else None
+    bspec = P(bq, sq, None)
+    hid = ((tp,) if tp else ()) + (dp if fsdp else ())  # hidden-dim shards
+    if hid:
+        wspec_i = P("model", None, hid)   # [E->ep, d, f->tp(+dp)]
+        wspec_o = P("model", hid, None)   # [E->ep, f->tp(+dp), d]
+    else:
+        wspec_i = wspec_o = P("model", None, None)
+    body = partial(_moe_shard_body, cfg=cfg, ffn_type=ffn_type,
+                   dispatch_backend=dispatch_backend, ep_axis=EP_AXIS,
+                   dp_axes=dp, lina=lina, fsdp=fsdp, tp_axis=tp, top_k=top_k)
+    has_wu = params.wu is not None
+    wu_spec = wspec_i if has_wu else P()
+    wu = params.wu if has_wu else jnp.zeros((), x.dtype)
+
+    aux_axes = (dp if bq else ()) + (("model",) if sq else ())
+
+    def wrapped(x, router, wi, wu, wo):
+        wu_ = wu if has_wu else None
+        y, aux, eidx, probs, _ = body(x, router, wi, wu_, wo)
+        # aux loss: tokens differ across every sharded axis -> mean over them
+        if aux_axes:
+            aux = lax.pmean(aux, aux_axes)
+        return y, aux, eidx, probs
+
+    # token-flat outputs (expert ids / probs) keep the (b, s)-derived shard
+    flat_axes = (tuple(bq) if bq else ()) + ((sq,) if sq else ())
+    flat_spec = P(flat_axes or None, None)
+    y, aux, eidx, probs = shard_map(
+        wrapped, mesh=mesh,
+        in_specs=(bspec, P(None, None), wspec_i, wu_spec, wspec_o),
+        out_specs=(bspec, P(), flat_spec, flat_spec),
+        check_rep=False,
+    )(x, params.router, params.wi, wu, params.wo)
+    return MoEOutput(y, aux, eidx, probs)

@@ -1,0 +1,147 @@
+"""Lina §5 two-phase resource scheduling: Eq. 1 device counts, replication of
+popular experts, first-fit-decreasing packing of unpopular ones, and the
+phase-2 fine-tune check.
+
+The planner runs on the host (numpy; it is the 'scheduler on device 0' of
+§6.2) and emits static-shape plan arrays that the jitted serve step consumes:
+
+  slot_expert  [n_devices, S]  expert hosted in each device sub-slot (-1 free)
+  replica_of   [E, R]          device-slot index of each replica of e (-1 pad)
+  n_replicas   [E]             live replica count per expert
+
+Token routing: a token choosing expert e goes to replica (pos mod
+n_replicas[e]) — balancing the a2a transfer size across the replicas' links,
+which is exactly the paper's 'coordinate all-to-all correspondingly'.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PlacementPlan:
+    slot_expert: np.ndarray    # [n_devices, S] int32
+    replica_of: np.ndarray     # [E, R] int32 (flat slot ids; -1 pad)
+    n_replicas: np.ndarray     # [E] int32
+    popularity: np.ndarray     # [E] float32 — the estimate the plan used
+
+    @property
+    def n_devices(self) -> int:
+        return self.slot_expert.shape[0]
+
+    @property
+    def max_pack(self) -> int:
+        return self.slot_expert.shape[1]
+
+    def device_load(self) -> np.ndarray:
+        """Estimated token share per device under this plan."""
+        e = self.popularity.shape[0]
+        load = np.zeros((self.n_devices,), np.float64)
+        share = self.popularity / np.maximum(self.n_replicas, 1)
+        for d in range(self.n_devices):
+            for s in range(self.max_pack):
+                ex = self.slot_expert[d, s]
+                if ex >= 0:
+                    load[d] += share[ex]
+        return load
+
+
+def identity_plan(n_experts: int, n_devices: int, max_pack: int = 4,
+                  max_replicas: int = 0) -> PlacementPlan:
+    """Uniform baseline: expert e on device e*D//E (DeepSpeed layout)."""
+    r = max_replicas or max_pack
+    slot = np.full((n_devices, max_pack), -1, np.int32)
+    rep = np.full((n_experts, r), -1, np.int32)
+    per_dev = -(-n_experts // n_devices)          # ceil: experts per device
+    assert per_dev <= max_pack, "identity layout exceeds max_pack"
+    for e in range(n_experts):
+        d, s = divmod(e, per_dev)
+        slot[d, s] = e
+        rep[e, 0] = d * max_pack + s
+    pop = np.full((n_experts,), 1.0 / n_experts, np.float32)
+    return PlacementPlan(slot, rep, np.ones((n_experts,), np.int32), pop)
+
+
+def plan_placement(popularity: np.ndarray, n_devices: int, max_pack: int = 4,
+                   max_replicas: int = 0) -> PlacementPlan:
+    """Phase-1 planner (Eq. 1 + FFD).
+
+    n_e = N * pop_e devices for expert e; experts with n_e >= 1 are
+    *replicated* on round(n_e) devices; the fractional rest are packed
+    first-fit-decreasing (item size = n_e, bin capacity = 1 device-worth of
+    throughput, at most ``max_pack`` experts per device §6.2); experts not in
+    any top-k list (pop 0) go to remaining free slots, else randomly.
+    """
+    e = popularity.shape[0]
+    pop = np.asarray(popularity, np.float64)
+    pop = pop / max(pop.sum(), 1e-12)
+    n_e = pop * n_devices
+    max_replicas = max_replicas or max_pack
+
+    slot_expert = np.full((n_devices, max_pack), -1, np.int32)
+    bin_load = np.zeros((n_devices,), np.float64)
+    bin_count = np.zeros((n_devices,), np.int32)
+    replicas: List[List[int]] = [[] for _ in range(e)]
+
+    def place(ex: int, load: float) -> None:
+        # first-fit over devices ordered by current load, respecting the
+        # load cap when possible
+        order = np.lexsort((np.arange(n_devices), bin_load))
+        for d in order:
+            if bin_count[d] < max_pack and (bin_load[d] + load <= 1.0 + 1e-9
+                                            or bin_count[d] == 0):
+                break
+        else:
+            # every bin is load-full: take the least-loaded device with a
+            # free sub-slot regardless of cap (paper's 'randomly assigned')
+            for d in order:
+                if bin_count[d] < max_pack:
+                    break
+            else:
+                raise ValueError("placement overflow: no free sub-slot")
+        slot_expert[d, bin_count[d]] = ex
+        replicas[ex].append(int(d * max_pack + bin_count[d]))
+        bin_load[d] += load
+        bin_count[d] += 1
+
+    # 1) popular experts first, replicated proportionally (FFD = decreasing);
+    # replica budget reserves one sub-slot per expert so nobody is orphaned.
+    replica_budget = n_devices * max_pack - e
+    order = np.argsort(-n_e)
+    for ex in order:
+        ex = int(ex)
+        r = int(min(max(1, round(n_e[ex])), max_replicas, n_devices,
+                    1 + replica_budget))
+        replica_budget -= r - 1
+        for _ in range(r):
+            place(ex, n_e[ex] / r)
+
+    rep = np.full((e, max_replicas), -1, np.int32)
+    n_rep = np.zeros((e,), np.int32)
+    for ex in range(e):
+        rs = replicas[ex][:max_replicas]
+        n_rep[ex] = len(rs)
+        rep[ex, : len(rs)] = rs
+    return PlacementPlan(slot_expert, rep, n_rep, pop.astype(np.float32))
+
+
+def needs_finetune(est_pop: np.ndarray, actual_pop: np.ndarray,
+                   top_k: int) -> bool:
+    """Phase 2 (§5.2): fine-tune iff top-2k estimated != top-2k actual."""
+    kk = min(2 * top_k, est_pop.shape[-1])
+    est = set(np.argsort(-est_pop)[:kk].tolist())
+    act = set(np.argsort(-actual_pop)[:kk].tolist())
+    return est != act
+
+
+def two_phase_plan(est_pop: np.ndarray, actual_pop: Optional[np.ndarray],
+                   n_devices: int, top_k: int, max_pack: int = 4):
+    """Returns (plan, finetuned: bool).  Phase 1 always plans from the
+    estimate; phase 2 re-plans from the actual popularity on deviation."""
+    plan = plan_placement(est_pop, n_devices, max_pack)
+    if actual_pop is not None and needs_finetune(est_pop, actual_pop, top_k):
+        return plan_placement(actual_pop, n_devices, max_pack), True
+    return plan, False

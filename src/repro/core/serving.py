@@ -1,0 +1,155 @@
+"""Serving-side MoE layer with Lina placement (replicated/packed experts).
+
+Where training dispatch routes a token to *the* device owning its expert,
+serving dispatch routes to one of the expert's replica slots per the
+``PlacementPlan`` (balanced round-robin by intra-expert position), and each
+device computes every expert packed in its sub-slots.  Weight movement is
+expressed as a gather of each device's hosted experts (the SPMD analogue of
+§6.2's weight swap; XLA lowers it to the minimal collective).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.configs.base import MoEConfig
+from repro.core.gating import capacity, top_k_gating
+from repro.core.moe import MoEParams, expert_ffn
+from repro.core.placement import PlacementPlan
+
+
+class PlanArrays(NamedTuple):
+    """Device-resident form of a PlacementPlan (static shapes)."""
+    slot_expert: jax.Array   # [n_dev, S] int32
+    replica_of: jax.Array    # [E, R] int32 flat slot ids
+    n_replicas: jax.Array    # [E] int32
+
+    @classmethod
+    def from_plan(cls, plan: PlacementPlan) -> "PlanArrays":
+        return cls(jnp.asarray(plan.slot_expert), jnp.asarray(plan.replica_of),
+                   jnp.asarray(plan.n_replicas))
+
+
+def route_to_slots(expert_idx: jax.Array, position: jax.Array,
+                   plan: PlanArrays) -> jax.Array:
+    """[T, k] expert choices -> [T, k] flat slot ids, round-robin over the
+    expert's replicas by buffer position (balances links, §5/§6.2)."""
+    n_rep = jnp.maximum(plan.n_replicas[expert_idx], 1)        # [T, k]
+    which = position % n_rep
+    return jnp.take_along_axis(plan.replica_of[expert_idx], which[..., None],
+                               axis=-1)[..., 0]
+
+
+def _serve_body(x, router, wi, wu, wo, plan: PlanArrays, *, cfg: MoEConfig,
+                ffn_type: str, ep_axis: str, top_k: int):
+    """x: [T_local, d]; wi/wu/wo sharded expert-major over ep_axis."""
+    t_local, d_model = x.shape
+    e = cfg.n_experts
+    ep = lax.psum(1, ep_axis)
+    n_dev, s_pack = plan.slot_expert.shape
+    cap = capacity(t_local, e, top_k, cfg.capacity_factor)
+    slot_cap = max(8, -(-cap // 1))          # per (device, sub-slot) capacity
+
+    logits = x @ router
+    g = top_k_gating(logits, top_k, slot_cap, cfg.aux_loss_weight)
+
+    # --- route to replica slots instead of home experts -------------------
+    slots = route_to_slots(g.expert_idx, g.position, plan)      # [T, k]
+    n_slots = n_dev * s_pack
+    # position within the slot: recount capacity per slot
+    oh = jax.nn.one_hot(slots, n_slots, dtype=jnp.int32)
+    pos = (jnp.cumsum(oh.reshape(-1, n_slots), axis=0) - oh.reshape(-1, n_slots))
+    pos = jnp.sum(pos.reshape(*slots.shape, n_slots) * oh, axis=-1)
+    dropped = g.dropped | (pos >= slot_cap)
+
+    flat_idx = jnp.where(dropped, n_slots * slot_cap, slots * slot_cap + pos)
+    buf = jnp.zeros((n_slots * slot_cap + 1, d_model), x.dtype)
+    src = jnp.broadcast_to(x[:, None, :], (*slots.shape, d_model))
+    buf = buf.at[flat_idx.reshape(-1)].set(src.reshape(-1, d_model), mode="drop")
+    buf = buf[:-1].reshape(n_dev, s_pack * slot_cap, d_model)
+
+    # --- a2a to slot owners ------------------------------------------------
+    # n_dev logical devices map onto ep physical ranks (group = n_dev/ep
+    # logical per physical; group == 1 on the production mesh, == n_dev on a
+    # single CPU device so the same code serves tests and demos)
+    assert n_dev % ep == 0, "plan devices must tile the EP group"
+    group = n_dev // ep
+    recv = lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=0,
+                          tiled=True)                 # [ep*grp*S*cap, d] mine
+    recv = recv.reshape(ep, group * s_pack, slot_cap, d_model)
+
+    # --- hosted-expert weights (gather = §6.2 weight swap) -----------------
+    my_dev = lax.axis_index(ep_axis)
+    hosted = lax.dynamic_slice_in_dim(plan.slot_expert, my_dev * group,
+                                      group, 0).reshape(group * s_pack)
+    s_pack = group * s_pack
+    e_local = e // ep
+    # wi is the local shard [E_local, d, f]; hosted experts may live on other
+    # shards -> gather the full stacks then select (XLA keeps only used rows
+    # alive; the optimized delta-fetch path is a §Perf hillclimb).
+    wi_full = lax.all_gather(wi, ep_axis, axis=0, tiled=True)     # [E, d, f]
+    wo_full = lax.all_gather(wo, ep_axis, axis=0, tiled=True)
+    wu_full = lax.all_gather(wu, ep_axis, axis=0, tiled=True) if wu is not None else None
+    safe = jnp.maximum(hosted, 0)
+    wi_h = wi_full[safe]
+    wo_h = wo_full[safe]
+    wu_h = wu_full[safe] if wu_full is not None else None
+
+    # --- compute packed experts sequentially (§6.2) ------------------------
+    toks = recv.transpose(1, 0, 2, 3).reshape(s_pack, ep * slot_cap, d_model)
+    out = expert_ffn(wi_h, wu_h, wo_h, toks, ffn_type)            # [S, n, d]
+    out = out * (hosted >= 0)[:, None, None]
+    out = out.reshape(s_pack, ep, slot_cap, d_model).transpose(1, 0, 2, 3)
+
+    # --- a2a back + combine -------------------------------------------------
+    back = lax.all_to_all(out.reshape(ep, s_pack * slot_cap, d_model),
+                          ep_axis, split_axis=0, concat_axis=0, tiled=True)
+    flat = back.reshape(n_slots * slot_cap, d_model)
+    gather_idx = jnp.clip(slots * slot_cap + pos, 0, n_slots * slot_cap - 1)
+    vals = flat[gather_idx]                                       # [T, k, d]
+    w = jnp.where(dropped, 0.0, g.gate_weights)[..., None]
+    y = jnp.sum(vals.astype(jnp.float32) * w, axis=1).astype(x.dtype)
+    return y, g.expert_idx, g.router_probs
+
+
+def serve_moe_layer(mesh, x, params: MoEParams, cfg: MoEConfig,
+                    plan: PlanArrays, *, ffn_type: str = "swiglu",
+                    top_k: int | None = None):
+    """Inference MoE layer honoring a placement plan.  x: [T, d] global."""
+    if mesh is None:
+        from repro.core.moe import default_mesh
+        mesh = default_mesh()
+    has_pod = "pod" in mesh.axis_names
+    dp = ("pod", "data") if has_pod else ("data",)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_n = 1
+    for a in dp:
+        dp_n *= sizes.get(a, 1)
+    bspec = P(dp, None) if x.shape[0] % dp_n == 0 else P(None, None)
+    wspec = P("model", None, None)
+    k = top_k if top_k is not None else max(cfg.top_k, 1)
+    has_wu = params.wu is not None
+    wu = params.wu if has_wu else jnp.zeros((), x.dtype)
+
+    def wrapped(x, router, wi, wu_, wo, se, ro, nr):
+        plan_arr = PlanArrays(se, ro, nr)
+        return _serve_body(x, router, wi, wu_ if has_wu else None, wo,
+                           plan_arr, cfg=cfg, ffn_type=ffn_type,
+                           ep_axis="model", top_k=k)
+
+    y, eidx, probs = shard_map(
+        wrapped, mesh=mesh,
+        in_specs=(bspec, P(None, None), wspec, wspec if has_wu else P(),
+                  wspec, P(None, None), P(None, None), P(None)),
+        out_specs=(bspec, bspec, bspec),
+        check_rep=False,
+    )(x, params.router, params.wi, wu, params.wo,
+      plan.slot_expert, plan.replica_of, plan.n_replicas)
+    return y, eidx, probs

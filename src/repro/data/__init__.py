@@ -1,0 +1,3 @@
+"""Data substrate: deterministic synthetic LM pipeline, sharded + prefetched."""
+from repro.data.pipeline import (DataConfig, SyntheticLM, make_batch_iterator,
+                                 Prefetcher)

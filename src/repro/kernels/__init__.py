@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers, with pure-jnp
+oracles (ref.py) and backend-dispatching wrappers (ops.py):
+
+  moe_ffn          grouped expert FFN GEMM (the MoE hot spot, paper Fig. 2)
+  topk_gating      fused router softmax + top-k
+  flash_attention  online-softmax attention (causal/SWA/bidirectional, GQA)
+  rwkv6            chunked WKV recurrence (rwkv6-1.6b)
+  ssd              Mamba2 chunk scan (zamba2-1.2b)
+
+Kernels compile natively on TPU; this container validates them with
+``interpret=True`` (kernel bodies executed on CPU) against ref.py.
+"""
+from repro.kernels.ops import (grouped_ffn_op, flash_attention_op, rwkv6_op,
+                               ssd_op, on_tpu)
+from repro.kernels.topk_gating import topk_gating_fused

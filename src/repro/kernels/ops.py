@@ -1,0 +1,60 @@
+"""Public jit'd kernel wrappers.
+
+On TPU the Pallas kernels compile natively; this container is CPU-only, so
+``interpret=True`` executes the kernel bodies in Python for correctness
+validation (the tests sweep shapes/dtypes against ref.py).  ``use_pallas``
+defaults to the backend: models call these ops and transparently get the
+kernel on TPU and the jnp oracle on CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.moe_ffn import grouped_ffn
+from repro.kernels.rwkv6 import rwkv6_wkv
+from repro.kernels.ssd import ssd_scan
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def grouped_ffn_op(x, wi, wu, wo, ffn_type: str = "swiglu",
+                   use_pallas: bool | None = None):
+    use = on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return ref.ref_grouped_ffn(x, wi, wu, wo, ffn_type)
+    return grouped_ffn(x, wi, wu, wo, ffn_type=ffn_type,
+                       interpret=_interpret())
+
+
+def flash_attention_op(q, k, v, causal: bool = True, window: int = 0,
+                       use_pallas: bool | None = None):
+    use = on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return ref.ref_attention(q, k, v, causal=causal, window=window)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           interpret=_interpret())
+
+
+def rwkv6_op(r, k, v, w, u, use_pallas: bool | None = None):
+    use = on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return ref.ref_rwkv6(r, k, v, w, u)
+    return rwkv6_wkv(r, k, v, w, u, interpret=_interpret())
+
+
+def ssd_op(x, dt, a_log, b, c, d_skip, use_pallas: bool | None = None):
+    use = on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return ref.ref_ssd(x, dt, a_log, b, c, d_skip)
+    return ssd_scan(x, dt, a_log, b, c, d_skip, interpret=_interpret())

@@ -1,0 +1,63 @@
+"""Fused router kernel: softmax + top-k (k<=2) + renormalized gate weights
+in one VMEM pass over token tiles (the gating network of paper §2.1 — it
+sits on the critical path before every dispatch a2a, so fusing removes two
+HBM round-trips of the [T, E] probability matrix).
+
+Grid: (T/bt,).  Block: logits [bt, E] resident in VMEM; outputs are the
+top-k ids/weights + full probs (the popularity estimator consumes probs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(logits_ref, idx_ref, w_ref, probs_ref, *, k: int):
+    x = logits_ref[...].astype(jnp.float32)            # [bt, E]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    ex = jnp.exp(x - m)
+    probs = ex / jnp.sum(ex, axis=-1, keepdims=True)
+    probs_ref[...] = probs
+
+    e = x.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, probs.shape, 1)
+    p = probs
+    ws, ids = [], []
+    for _ in range(k):
+        top = jnp.max(p, axis=-1)
+        arg = jnp.argmax(p, axis=-1).astype(jnp.int32)
+        ws.append(top)
+        ids.append(arg)
+        p = jnp.where(iota == arg[:, None], -1.0, p)
+    w = jnp.stack(ws, axis=-1)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    idx_ref[...] = jnp.stack(ids, axis=-1)
+    w_ref[...] = w
+
+
+def topk_gating_fused(logits, k: int = 2, *, block_t: int = 1024,
+                      interpret: bool = True):
+    """logits: [T, E] -> (idx [T,k] i32, w [T,k] f32, probs [T,E] f32)."""
+    t, e = logits.shape
+    bt = min(block_t, t)
+    while t % bt:
+        bt //= 2
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=(t // bt,),
+        in_specs=[pl.BlockSpec((bt, e), lambda i: (i, 0))],
+        out_specs=(
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, e), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+            jax.ShapeDtypeStruct((t, k), jnp.float32),
+            jax.ShapeDtypeStruct((t, e), jnp.float32),
+        ),
+        interpret=interpret,
+    )(logits)

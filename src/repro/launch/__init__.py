@@ -1,0 +1,2 @@
+"""Launchers: production mesh, dry-run, training and serving drivers."""
+from repro.launch.mesh import make_production_mesh, make_mesh, dp_size, ep_size

@@ -1,0 +1,187 @@
+"""Compiled-HLO analysis for the dry-run roofline.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE regardless of trip
+count (loop-blind), so collective traffic inside scan-over-layers would be
+undercounted ~n_layers-fold.  This module parses the compiled module text,
+builds the computation call graph, extracts each while loop's trip count
+from its condition computation (the loop-bound constant), and multiplies
+every collective's bytes by the product of enclosing trip counts.
+
+Byte conventions (per device, 'wire bytes' on a ring):
+    all-reduce          2 * size * (n-1)/n
+    all-gather          out_size * (n-1)/n      (each device receives the rest)
+    reduce-scatter      in_size  * (n-1)/n
+    all-to-all          size * (n-1)/n
+    collective-permute  size
+``size`` is the op's result byte size parsed from the result type (tuples
+summed); n is the replica-group size.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+_TYPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_OP_NAME_RE = re.compile(
+    r"\b(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute|"
+    r"while)\(")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_GROUPS_RE = re.compile(r"replica_groups=(?:\[(\d+),(\d+)\]|\{([^}]*)\})")
+_CALL_ATTR_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _type_bytes(type_str: str) -> int:
+    return sum((lambda n: n)(
+        _DTYPE_BYTES[d] * eval("*".join(s.split(",")) if s else "1"))
+        for d, s in _TYPE_RE.findall(type_str))
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_RE.search(rest)
+    if not m:
+        return default
+    if m.group(2) is not None:
+        return int(m.group(2))       # iota [n_groups, group_size]
+    groups = m.group(3).split("},{")  # explicit {{0,1},{2,3}}
+    first = groups[0].strip("{}")
+    return max(1, len(first.split(",")))
+
+
+def parse_module(hlo: str) -> dict:
+    """Split into computations; collect per-computation collectives/whiles."""
+    comps: Dict[str, dict] = {}
+    cur = None
+    for line in hlo.splitlines():
+        mc = _COMP_RE.match(line.strip()) if ("->" in line and "{" in line) \
+            else None
+        if mc:
+            cur = mc.group(1)
+            comps[cur] = {"collectives": [], "whiles": [], "constants": [],
+                          "calls": []}
+            continue
+        if cur is None:
+            continue
+        for c in _CONST_RE.findall(line):
+            comps[cur]["constants"].append(int(c))
+        ma = _ASSIGN_RE.match(line)
+        mo = _OP_NAME_RE.search(line) if ma else None
+        if not mo:
+            # conditional/call computations execute once per visit
+            if "conditional(" in line or re.search(r"\bcall\(", line):
+                for ref in re.findall(
+                        r"(?:true_computation|false_computation|to_apply)="
+                        r"%?([\w.\-]+)", line):
+                    comps[cur]["calls"].append(ref)
+                mb = re.search(r"branch_computations=\{([^}]*)\}", line)
+                if mb:
+                    comps[cur]["calls"].extend(
+                        x.strip().lstrip("%") for x in mb.group(1).split(","))
+            continue
+        op = mo.group(1).replace("-start", "")
+        rest = line[mo.end():]
+        if op == "while":
+            attrs = dict(re.findall(r"(body|condition)=%?([\w.\-]+)", rest))
+            mt = re.search(r'known_trip_count..:..n.:.(\d+)', rest)
+            if mt:
+                attrs["trip"] = int(mt.group(1))
+            comps[cur]["whiles"].append(attrs)
+        else:
+            # result type = text between '=' and the op name
+            type_str = line[ma.end():mo.start()]
+            size = _type_bytes(type_str)
+            n = _group_size(rest, 1)
+            comps[cur]["collectives"].append((op, size, n))
+    return comps
+
+
+def _trip_count(comps: dict, cond_name: str) -> int:
+    cs = comps.get(cond_name, {}).get("constants", [])
+    return max(cs) if cs else 1
+
+
+def wire_bytes(op: str, size: int, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    f = (n - 1) / n
+    if op == "all-reduce":
+        return 2.0 * size * f
+    if op == "all-gather":
+        return size * f                  # size = gathered result
+    if op == "reduce-scatter":
+        return size * n * f              # size = scattered result; input n*size
+    if op == "all-to-all":
+        return size * f
+    return float(size)                   # collective-permute
+
+
+def collective_summary(hlo: str, entry: str = None) -> dict:
+    comps = parse_module(hlo)
+    if entry is None:
+        # entry computation: the one never referenced as body/cond... use the
+        # one containing top-level whiles + most collectives; XLA names it
+        # like the jit'd function. Fall back: computation named 'main' or
+        # containing '.entry' else the largest.
+        referenced = set()
+        for c in comps.values():
+            for w in c["whiles"]:
+                referenced.update(w.values())
+        cands = [k for k in comps if k not in referenced]
+        entry = None
+        for k in cands:
+            if "main" in k or "entry" in k:
+                entry = k
+                break
+        if entry is None and cands:
+            entry = max(cands, key=lambda k: len(comps[k]["collectives"])
+                        + len(comps[k]["whiles"]))
+
+    totals = defaultdict(float)
+    raw = defaultdict(float)
+    counts = defaultdict(float)
+    seen = set()
+
+    def visit(name: str, mult: float):
+        if name not in comps or (name, mult) in seen:
+            return
+        seen.add((name, mult))
+        c = comps[name]
+        for op, size, n in c["collectives"]:
+            totals[op] += wire_bytes(op, size, n) * mult
+            raw[op] += size * mult
+            counts[op] += mult
+        for w in c["whiles"]:
+            trip = w.get("trip") or _trip_count(comps, w.get("condition", ""))
+            if "body" in w:
+                visit(w["body"], mult * trip)
+        for ref in c["calls"]:
+            visit(ref, mult)
+
+    if entry:
+        visit(entry, 1.0)
+    return {
+        "entry": entry,
+        "wire_bytes": dict(totals),
+        "raw_bytes": dict(raw),
+        "counts": {k: int(v) for k, v in counts.items()},
+        "total_wire_bytes": float(sum(totals.values())),
+        "total_raw_bytes": float(sum(raw.values())),
+    }
+
+
+def while_trip_counts(hlo: str) -> List[int]:
+    comps = parse_module(hlo)
+    out = []
+    for c in comps.values():
+        for w in c["whiles"]:
+            out.append(w.get("trip")
+                       or _trip_count(comps, w.get("condition", "")))
+    return out

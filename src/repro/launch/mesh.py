@@ -1,0 +1,53 @@
+"""Production meshes.  Functions, not module constants, so importing never
+touches jax device state (the dry-run must set XLA_FLAGS first)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary (test-sized) mesh with the same axis conventions."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_size(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("pod", 1) * sizes.get("data", 1)
+
+
+def ep_size(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get("model", 1)
+
+
+def tp_axes(mesh):
+    """The tensor-parallel axes: `model` plus the expert-slicing `tp` axis
+    when present (archs whose expert count < 16)."""
+    return ("model", "tp") if "tp" in mesh.axis_names else ("model",)
+
+
+def arch_mesh(cfg, *, multi_pod: bool = False):
+    """The production mesh, re-viewed for the arch: when n_experts does not
+    divide the 16-way model axis, split it into (model=ep, tp=16/ep) so the
+    MoE a2a runs over `model` and experts are tensor-sliced over `tp`
+    (DeepSpeed-MoE expert slicing).  Device order is preserved — this is the
+    same physical 16x16 (or 2x16x16) mesh required by the dry-run."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    e = getattr(cfg.moe, "n_experts", 0)
+    if not e or 16 % e != 0 or e >= 16:
+        return mesh
+    ep, tp = e, 16 // e
+    shape = (2, 16, ep, tp) if multi_pod else (16, ep, tp)
+    axes = ("pod", "data", "model", "tp") if multi_pod else \
+        ("data", "model", "tp")
+    import jax.sharding as jsh
+    return jsh.Mesh(mesh.devices.reshape(shape), axes,
+                    axis_types=(jsh.AxisType.Auto,) * len(axes))

@@ -1,0 +1,168 @@
+"""Jittable train/prefill/decode steps + ShapeDtypeStruct input specs for
+every (arch × shape) dry-run cell.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable stand-ins —
+no device allocation — exactly what ``jax.jit(...).lower()`` needs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.serving import PlanArrays
+from repro.core.placement import identity_plan
+from repro.models import lm as lm_mod
+from repro.models.lm import LMCache, LMParams, FRAME_DIM
+from repro.optim.adamw import AdamWConfig, OptState, adamw_update, init_opt_state
+
+SERVE_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.frontend == "audio_stub":
+        out["frames"] = _sds((b, s, FRAME_DIM), jnp.bfloat16)
+        if shape.kind == "train":
+            out["labels"] = _sds((b, s), jnp.int32)
+        return out
+    if cfg.frontend == "vision_stub":
+        st = s - cfg.n_patches
+        out["tokens"] = _sds((b, st), jnp.int32)
+        out["patches"] = _sds((b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        if shape.kind == "train":
+            out["labels"] = _sds((b, st), jnp.int32)
+        return out
+    out["tokens"] = _sds((b, s), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = _sds((b, s), jnp.int32)
+    return out
+
+
+def params_struct(cfg: ModelConfig) -> LMParams:
+    return jax.eval_shape(partial(lm_mod.init_params, cfg),
+                          jax.random.key(0))
+
+
+def cache_struct(cfg: ModelConfig, shape: ShapeConfig) -> LMCache:
+    return jax.eval_shape(partial(lm_mod.init_cache, cfg, shape.global_batch,
+                                  shape.seq_len, SERVE_DTYPE))
+
+
+def opt_struct(cfg: ModelConfig, opt_cfg: AdamWConfig) -> OptState:
+    ps = params_struct(cfg)
+    return jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), ps)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, opt_cfg=None) -> dict:
+    """All step inputs as ShapeDtypeStructs, keyed by step argument name."""
+    specs = {"params": params_struct(cfg)}
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig(state_dtype=cfg.opt_state_dtype)
+        specs["opt_state"] = opt_struct(cfg, opt_cfg)
+        specs["batch"] = batch_struct(cfg, shape)
+    elif shape.kind == "prefill":
+        specs["batch"] = batch_struct(cfg, shape)
+    else:  # decode / long_decode: one new token against a seq_len cache
+        specs["cache"] = cache_struct(cfg, shape)
+        specs["token"] = _sds((shape.global_batch,), jnp.int32)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh, opt_cfg: Optional[AdamWConfig] = None,
+                    *, lina: bool = True, fsdp: bool = True,
+                    dispatch_backend: str = "scatter",
+                    microbatches: int = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``microbatches > 1`` scans gradient accumulation over batch slices —
+    the standard activation-memory lever (and the granularity at which
+    Lina's chunked DP reduction can overlap the next microbatch's compute;
+    see core/microop.py).
+    """
+    opt_cfg = opt_cfg or AdamWConfig(state_dtype=cfg.opt_state_dtype)
+
+    def loss_fn(params, batch):
+        out = lm_mod.forward_train(mesh, cfg, params, batch, lina=lina,
+                                   dispatch_backend=dispatch_backend,
+                                   fsdp=fsdp)
+        return out.loss, out
+
+    def train_step(params, opt_state, batch):
+        if microbatches <= 1:
+            (loss, out), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+            aux = out.aux_loss
+        else:
+            mb = {k: v.reshape(microbatches, v.shape[0] // microbatches,
+                               *v.shape[1:]) for k, v in batch.items()}
+
+            def acc_step(carry, mbatch):
+                g_acc, l_acc, a_acc = carry
+                (l, out), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mbatch)
+                g_acc = jax.tree.map(lambda a, b_: a + b_, g_acc, g)
+                return (g_acc, l_acc + l, a_acc + out.aux_loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_step, (zeros, jnp.zeros(()), jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+            aux = aux / microbatches
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, "aux_loss": aux, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, *, serve_plan=None,
+                      serve_top_k=None, fsdp: bool = True):
+    def prefill_step(params, batch):
+        out = lm_mod.forward_prefill(mesh, cfg, params, batch,
+                                     serve_plan=serve_plan,
+                                     serve_top_k=serve_top_k, fsdp=fsdp)
+        return out.logits
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh, *, serve_plan=None,
+                     serve_top_k=None, fsdp: bool = True):
+    def decode_step(params, cache, token):
+        return lm_mod.decode_step(mesh, cfg, params, cache, token,
+                                  serve_plan=serve_plan,
+                                  serve_top_k=serve_top_k, fsdp=fsdp)
+    return decode_step
+
+
+def make_serve_plan(cfg: ModelConfig, mesh) -> Optional[PlanArrays]:
+    """Identity plan sized to the EP group (popularity plans replace it at
+    runtime via the Server)."""
+    if not cfg.moe.enabled:
+        return None
+    from repro.launch.mesh import ep_size
+    ep = ep_size(mesh)
+    if cfg.moe.n_experts % ep:
+        return None
+    pack = max(1, cfg.moe.n_experts // ep)
+    return PlanArrays.from_plan(
+        identity_plan(cfg.moe.n_experts, ep, max_pack=max(pack, 2)))

@@ -1,0 +1,110 @@
+"""Dry-run sweep driver: every (arch x applicable shape) x (16x16, 2x16x16).
+
+Each cell runs in a fresh subprocess (jax locks the device count at init and
+a crashed cell must not kill the sweep).  Results append to a JSONL file;
+existing cells are skipped, so the sweep is resumable.
+
+    PYTHONPATH=src python -m repro.launch.sweep --out results/dryrun/cells.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import ASSIGNED, SHAPES, applicable_shapes, skip_reason
+
+
+def all_cells():
+    for cfg in ASSIGNED:
+        for shape_name in ("train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"):
+            for multi_pod in (False, True):
+                yield cfg.name, shape_name, multi_pod
+
+
+def cell_key(arch, shape, multi_pod):
+    return f"{arch}|{shape}|{'2x16x16' if multi_pod else '16x16'}"
+
+
+def load_done(path):
+    done = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                done[cell_key(r["arch"], r["shape"],
+                              r["mesh"] == "2x16x16")] = r["status"]
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun/cells.jsonl")
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--only-arch", default=None)
+    ap.add_argument("--retry-failed", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = load_done(args.out)
+    cells = [c for c in all_cells()
+             if args.only_arch in (None, c[0])]
+    todo = [c for c in cells
+            if cell_key(*c) not in done
+            or (args.retry_failed and done[cell_key(*c)] == "error")]
+    print(f"{len(cells)} cells, {len(cells) - len(todo)} done, "
+          f"{len(todo)} to run", flush=True)
+
+    for i, (arch, shape, mp) in enumerate(todo):
+        from repro.configs import get_config
+        cfg = get_config(arch)
+        sr = skip_reason(cfg, SHAPES[shape])
+        t0 = time.time()
+        if sr:
+            with open(args.out, "a") as f:
+                f.write(json.dumps({
+                    "arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "status": "skip", "reason": sr}) + "\n")
+            print(f"[{i+1}/{len(todo)}] SKIP {arch} x {shape}: {sr}",
+                  flush=True)
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--json", args.out]
+        if mp:
+            cmd.append("--multi-pod")
+        print(f"[{i+1}/{len(todo)}] RUN {arch} x {shape} "
+              f"{'2x16x16' if mp else '16x16'} ...", flush=True)
+        try:
+            p = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            dt = time.time() - t0
+            if p.returncode != 0:
+                err = (p.stderr or "")[-2000:]
+                with open(args.out, "a") as f:
+                    f.write(json.dumps({
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "error", "error": err}) + "\n")
+                print(f"   ERROR ({dt:.0f}s): {err.splitlines()[-1] if err else '?'}",
+                      flush=True)
+            else:
+                print(f"   ok ({dt:.0f}s)", flush=True)
+        except subprocess.TimeoutExpired:
+            with open(args.out, "a") as f:
+                f.write(json.dumps({
+                    "arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if mp else "16x16",
+                    "status": "error", "error": "timeout"}) + "\n")
+            print("   TIMEOUT", flush=True)
+
+
+if __name__ == "__main__":
+    main()

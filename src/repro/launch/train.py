@@ -1,0 +1,65 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gpt2-moe-smoke \
+        --steps 50 --batch 8 --seq 128 [--no-lina] [--ckpt-dir /tmp/ckpt]
+
+Smoke-scale on CPU; on a TPU cluster the same entry point runs the
+production mesh (--mesh 16x16) with the dry-run-validated shardings.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--no-lina", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch, seed=args.seed)
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 10, 1),
+                          state_dtype=cfg.opt_state_dtype)
+    tcfg = TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         ckpt_every=args.ckpt_every, lina=not args.no_lina,
+                         microbatches=args.microbatches, seed=args.seed)
+    trainer = Trainer(cfg, data_cfg, opt_cfg, tcfg)
+
+    def log(step, m):
+        if step % tcfg.log_every == 0:
+            print(f"step {step:5d}  loss {m['loss']:.4f}  "
+                  f"aux {m['aux_loss']:.4f}  gnorm {m['grad_norm']:.3f}",
+                  flush=True)
+
+    trainer.run(on_step=log)
+    if trainer.packing_decision:
+        print(f"expert packing: {trainer.packing_decision}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(trainer.metrics_log, f)
+    first, last = trainer.metrics_log[0]["loss"], trainer.metrics_log[-1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f} over {args.steps} steps")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,6 @@
+"""Model zoo: one functional stack covering every assigned architecture."""
+from repro.models.lm import (
+    LMParams, LMCache, ModelOutput, init_params, init_cache,
+    forward_train, forward_prefill, decode_step,
+)
+from repro.models.attention import AttnParams, KVCache, attention, init_kv_cache

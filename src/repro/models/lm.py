@@ -1,0 +1,591 @@
+"""Unified model stack for every assigned architecture.
+
+One functional LM covering: dense transformers (granite/qwen*), MoE
+transformers with interleaving + shared expert (llama4, mixtral, paper
+models), hybrid Mamba2+shared-attention (zamba2), attention-free RWKV6, the
+encoder-only audio backbone (hubert) and the VLM stub frontend (llava).
+
+Everything is scan-over-layer-groups with stacked params (compile-time
+tractability at 512 devices) and optional remat.  MoE groups call
+``repro.core.moe_layer`` (training, Lina micro-op pipeline) or
+``repro.core.serving.serve_moe_layer`` (inference, placement plans).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.moe import MoEParams, init_moe_params, moe_layer
+from repro.core.serving import PlanArrays, serve_moe_layer
+from repro.models.attention import (AttnParams, KVCache, attention,
+                                    decode_attention, init_attn_params,
+                                    init_kv_cache)
+from repro.models.layers import constrain, dense_init, dp_axes, rms_norm, tp_axes
+from repro.models import ssm as ssm_mod
+from repro.models import rwkv as rwkv_mod
+
+FRAME_DIM = 512      # audio stub frame-embedding dim
+CE_CHUNK = 1024      # sequence chunk for the memory-bounded CE
+MASK_EVERY = 13      # hubert deterministic mask pattern
+
+
+class FFNParams(NamedTuple):
+    w_in: jax.Array                  # [d, f]
+    w_up: Optional[jax.Array]        # [d, f] (swiglu) or None
+    w_out: jax.Array                 # [f, d]
+
+
+class GroupParams(NamedTuple):
+    """One scanned layer group (= `moe.every` transformer blocks)."""
+    attn: AttnParams                 # stacked [every, ...]
+    ln1: jax.Array                   # [every, d]
+    ln2: jax.Array                   # [every, d]
+    ffn: Optional[FFNParams]         # stacked [n_dense, ...] or None
+    moe: Optional[MoEParams]         # one per group or None
+    shared: Optional[FFNParams]      # shared expert (llama4) or None
+
+
+class HybridParams(NamedTuple):
+    mamba: Any                       # MambaParams stacked [L, ...]
+    ln_m: jax.Array                  # [L, d]
+    shared_attn: AttnParams          # single shared block
+    shared_ffn: FFNParams
+    ln_s1: jax.Array                 # [d]
+    ln_s2: jax.Array                 # [d]
+
+
+class RWKVStack(NamedTuple):
+    blocks: Any                      # RWKVParams stacked [L, ...]
+    ln1: jax.Array                   # [L, d]
+    ln2: jax.Array                   # [L, d]
+
+
+class LMParams(NamedTuple):
+    embed: jax.Array                 # [V, d]
+    patch_proj: Optional[jax.Array]  # [d, d] vision stub
+    frame_proj: Optional[jax.Array]  # [FRAME_DIM, d] audio stub
+    mask_emb: Optional[jax.Array]    # [FRAME_DIM] hubert mask embedding
+    stack: Any                       # GroupParams | HybridParams | RWKVStack
+    final_norm: jax.Array            # [d]
+    lm_head: Optional[jax.Array]     # [d, V] or None (tied)
+
+
+class LMCache(NamedTuple):
+    kv: Optional[KVCache]            # stacked [G, every, ...] or [taps, ...]
+    mamba: Optional[Any]             # MambaState stacked [L, ...]
+    rwkv: Optional[Any]              # RWKVState stacked [L, ...]
+    pos: jax.Array                   # [B] next position
+
+
+class ModelOutput(NamedTuple):
+    loss: Optional[jax.Array]
+    logits: Optional[jax.Array]
+    aux_loss: jax.Array
+    expert_choices: Optional[jax.Array]   # [n_moe_layers, T] top-1
+    cache: Optional[LMCache]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_ffn(key, d, f, ffn_type, dtype) -> FFNParams:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return FFNParams(
+        dense_init(k1, (d, f), dtype=dtype),
+        dense_init(k2, (d, f), dtype=dtype) if ffn_type == "swiglu" else None,
+        dense_init(k3, (f, d), dtype=dtype),
+    )
+
+
+def _stack(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key) -> LMParams:
+    dtype = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    embed = (jax.random.normal(keys[0], (cfg.vocab_size, d)) * d ** -0.5
+             ).astype(dtype)
+
+    patch_proj = dense_init(keys[1], (d, d), dtype=dtype) \
+        if cfg.frontend == "vision_stub" else None
+    frame_proj = dense_init(keys[1], (FRAME_DIM, d), dtype=dtype) \
+        if cfg.frontend == "audio_stub" else None
+    mask_emb = jnp.zeros((FRAME_DIM,), dtype) \
+        if cfg.frontend == "audio_stub" else None
+
+    hd = cfg.resolved_head_dim
+    if cfg.layer_pattern:                                  # hybrid (zamba2)
+        n_l = cfg.n_layers
+        mamba = _stack(lambda k: ssm_mod.init_mamba_params(k, cfg, dtype),
+                       keys[2], n_l)
+        stack = HybridParams(
+            mamba=mamba,
+            ln_m=jnp.ones((n_l, d), dtype),
+            shared_attn=init_attn_params(keys[3], d, cfg.n_heads,
+                                         cfg.n_kv_heads, hd, dtype=dtype),
+            shared_ffn=_init_ffn(keys[4], d, cfg.d_ff, cfg.ffn_type, dtype),
+            ln_s1=jnp.ones((d,), dtype),
+            ln_s2=jnp.ones((d,), dtype),
+        )
+    elif cfg.attention_free:                               # rwkv6
+        n_l = cfg.n_layers
+        stack = RWKVStack(
+            blocks=_stack(lambda k: rwkv_mod.init_rwkv_params(k, cfg, dtype),
+                          keys[2], n_l),
+            ln1=jnp.ones((n_l, d), dtype),
+            ln2=jnp.ones((n_l, d), dtype),
+        )
+    else:                                                   # transformer
+        every = cfg.moe.every if cfg.moe.enabled else 1
+        n_groups = cfg.n_layers // every
+        n_dense = (every - 1) if cfg.moe.enabled else every
+
+        def one_group(k):
+            k1, k2, k3, k4 = jax.random.split(k, 4)
+            attn = _stack(lambda kk: init_attn_params(
+                kk, d, cfg.n_heads, cfg.n_kv_heads, hd,
+                qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, dtype=dtype),
+                k1, every)
+            ffn = _stack(lambda kk: _init_ffn(kk, d, cfg.d_ff, cfg.ffn_type,
+                                              dtype), k2, n_dense) \
+                if n_dense else None
+            moe = init_moe_params(k3, d, cfg.moe.d_ff or cfg.d_ff,
+                                  cfg.moe.n_experts, cfg.ffn_type, dtype) \
+                if cfg.moe.enabled else None
+            shared = _init_ffn(k4, d, cfg.moe.d_ff or cfg.d_ff, cfg.ffn_type,
+                               dtype) if cfg.moe.shared_expert else None
+            return GroupParams(attn, jnp.ones((every, d), dtype),
+                               jnp.ones((every, d), dtype), ffn, moe, shared)
+
+        stack = _stack(one_group, keys[2], n_groups)
+
+    lm_head = None if cfg.tie_embeddings else dense_init(
+        keys[5], (d, cfg.vocab_size), dtype=dtype)
+    return LMParams(embed, patch_proj, frame_proj, mask_emb, stack,
+                    jnp.ones((d,), dtype), lm_head)
+
+
+# ---------------------------------------------------------------------------
+# block applications
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(p: FFNParams, x, ffn_type, mesh, tensor_parallel=True):
+    dp = dp_axes(mesh)
+    h = x @ p.w_in
+    h = constrain(h, mesh, P(dp, None,
+                             tp_axes(mesh) if tensor_parallel else None))
+    if ffn_type == "swiglu":
+        h = jax.nn.silu(h) * (x @ p.w_up)
+    else:
+        h = jax.nn.gelu(h)
+    y = h @ p.w_out
+    return constrain(y, mesh, P(dp, None, None))
+
+
+def _tree_idx(tree, i):
+    return jax.tree.map(lambda a: a[i] if a is not None else None, tree,
+                        is_leaf=lambda a: a is None)
+
+
+def _group_apply(mesh, cfg, gp: GroupParams, x, *, lina, serve_plan=None,
+                 serve_top_k=None, dispatch_backend="scatter", fsdp=False):
+    """Apply one layer group on [B, S, d].  Returns (x, aux, top1_experts)."""
+    every = cfg.moe.every if cfg.moe.enabled else 1
+    aux = jnp.zeros((), jnp.float32)
+    top1 = None
+    b, s, d = x.shape
+    for j in range(every):
+        a_p = _tree_idx(gp.attn, j)
+        h = rms_norm(x, gp.ln1[j], cfg.norm_eps)
+        y, _ = attention(mesh, a_p, h, cfg)
+        x = x + y
+        h = rms_norm(x, gp.ln2[j], cfg.norm_eps)
+        is_moe = cfg.moe.enabled and j == every - 1
+        if not is_moe:
+            ffn_p = _tree_idx(gp.ffn, j) if (gp.ffn is not None and
+                                             getattr(gp.ffn.w_in, "ndim", 0) > 2) \
+                else gp.ffn
+            x = x + _ffn_apply(ffn_p, h, cfg.ffn_type, mesh,
+                                   cfg.tensor_parallel)
+        else:
+            if serve_plan is not None:
+                h2 = h.reshape(b * s, d)
+                y2, eidx, _ = serve_moe_layer(mesh, h2, gp.moe, cfg.moe,
+                                              serve_plan,
+                                              ffn_type=cfg.ffn_type,
+                                              top_k=serve_top_k)
+                moe_y = y2.reshape(b, s, d)
+                a = jnp.zeros((), jnp.float32)
+            else:
+                out = moe_layer(mesh, h, gp.moe, cfg.moe,
+                                ffn_type=cfg.ffn_type,
+                                dispatch_backend=dispatch_backend,
+                                lina=lina, fsdp=fsdp)
+                moe_y, a, eidx = out.y, out.aux_loss, out.expert_idx
+            if gp.shared is not None:
+                moe_y = moe_y + _ffn_apply(gp.shared, h, cfg.ffn_type,
+                                           mesh, cfg.tensor_parallel)
+            x = x + moe_y
+            aux = aux + a
+            top1 = eidx[:, 0]
+    return x, aux, top1
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def cast_for_compute(cfg, params: LMParams) -> LMParams:
+    """Master (fp32) params -> compute dtype; int/float8 leaves untouched."""
+    dt = jnp.dtype(cfg.dtype)
+    def one(p):
+        if p.dtype in (jnp.float32, jnp.bfloat16, jnp.float16):
+            return p.astype(dt)
+        return p
+    return jax.tree.map(one, params)
+
+
+def embed_inputs(cfg, params: LMParams, *, tokens=None, patches=None,
+                 frames=None, mask=None):
+    """Returns (x [B,S,d], loss_mask [B,S] or None extra semantics)."""
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio_stub":
+        f = frames
+        if mask is not None:
+            f = jnp.where(mask[..., None], params.mask_emb.astype(f.dtype), f)
+        return (f @ params.frame_proj).astype(dtype)
+    x = params.embed[tokens].astype(dtype)
+    if cfg.frontend == "vision_stub":
+        pe = (patches.astype(params.patch_proj.dtype) @ params.patch_proj
+              ).astype(dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def unembed_weight(params: LMParams):
+    return params.embed.T if params.lm_head is None else params.lm_head
+
+
+def chunked_ce_loss(mesh, x, w_unembed, labels, loss_mask, chunk=CE_CHUNK):
+    """Cross-entropy without materializing [B,S,V] logits: scan over
+    sequence chunks (vocab stays `model`-sharded inside each chunk)."""
+    b, s, d = x.shape
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    nc = s // c
+    xs = x.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, c).transpose(1, 0, 2)
+    ms = loss_mask.reshape(b, nc, c).transpose(1, 0, 2)
+
+    def step(carry, inp):
+        tot, cnt = carry
+        xc, lc, mc = inp
+        logits = (xc @ w_unembed).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mc
+        return (tot + nll.sum(), cnt + mc.sum()), None
+
+    # remat: recompute the chunk logits in backward (one matmul) instead of
+    # saving [B, chunk, V] fp32 per chunk (2.5GB/device at 150k vocab)
+    step = jax.checkpoint(step,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros(()), jnp.zeros(())),
+                                 (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _run_stack(mesh, cfg, params: LMParams, x, *, lina=True, serve_plan=None,
+               serve_top_k=None, dispatch_backend="scatter", fsdp=False):
+    """Full-sequence stack application.  Returns (x, aux, expert_choices)."""
+    dp = dp_axes(mesh)
+    x = constrain(x, mesh, P(dp, None, None))
+    if isinstance(params.stack, HybridParams):
+        return _run_hybrid(mesh, cfg, params.stack, x)
+    if isinstance(params.stack, RWKVStack):
+        return _run_rwkv(mesh, cfg, params.stack, x)
+
+    gp_stack = params.stack
+
+    def body(x, gp):
+        if cfg.seq_parallel:
+            # Megatron-SP: the carry (and everything outside attention) lives
+            # sequence-sharded over `model`; XLA gathers around attention.
+            x = constrain(x, mesh, P(dp, tp_axes(mesh), None))
+        x, aux, top1 = _group_apply(mesh, cfg, gp, x, lina=lina,
+                                    serve_plan=serve_plan,
+                                    serve_top_k=serve_top_k,
+                                    dispatch_backend=dispatch_backend,
+                                    fsdp=fsdp)
+        if top1 is None:
+            top1 = jnp.zeros((x.shape[0] * x.shape[1],), jnp.int32)
+        return x, (aux, top1)
+
+    if cfg.remat:
+        # save only the layer boundaries; recompute everything inside the
+        # block in backward (activation memory = O(layers * hidden), the
+        # standard full-remat policy for big-model training)
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (auxs, top1s) = jax.lax.scan(body, x, gp_stack)
+    aux = auxs.sum()
+    experts = top1s if cfg.moe.enabled else None
+    return x, aux, experts
+
+
+def _run_hybrid(mesh, cfg, hp: HybridParams, x):
+    taps = jnp.array([ch in "A*" for ch in cfg.layer_pattern], jnp.bool_)
+    b, s, d = x.shape
+    kv_shape = None  # sequence path: no cache maintenance
+
+    def shared_block(x):
+        h = rms_norm(x, hp.ln_s1, cfg.norm_eps)
+        y, _ = attention(mesh, hp.shared_attn, h, cfg)
+        x = x + y
+        h = rms_norm(x, hp.ln_s2, cfg.norm_eps)
+        return x + _ffn_apply(hp.shared_ffn, h, cfg.ffn_type, mesh)
+
+    def body(x, inp):
+        mp, ln, tap = inp
+        h = rms_norm(x, ln, cfg.norm_eps)
+        y, _ = ssm_mod.mamba_block(mp, cfg, h)
+        x = x + y
+        x = jax.lax.cond(tap, shared_block, lambda z: z, x)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, (hp.mamba, hp.ln_m, taps))
+    return x, jnp.zeros(()), None
+
+
+def _run_rwkv(mesh, cfg, st: RWKVStack, x):
+    def body(x, inp):
+        bp, l1, l2 = inp
+        h = rms_norm(x, l1, cfg.norm_eps)
+        y, _, _ = rwkv_mod.time_mix(bp, cfg, h)
+        x = x + y
+        h = rms_norm(x, l2, cfg.norm_eps)
+        y, _ = rwkv_mod.channel_mix(bp, h)
+        return x + y, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, (st.blocks, st.ln1, st.ln2))
+    return x, jnp.zeros(()), None
+
+
+def forward_train(mesh, cfg, params: LMParams, batch: dict, *, lina=True,
+                  dispatch_backend="scatter", fsdp=False) -> ModelOutput:
+    """Training forward: returns (loss, aux, expert_choices)."""
+    params = cast_for_compute(cfg, params)
+    tokens = batch.get("tokens")
+    if cfg.frontend == "audio_stub":
+        s = batch["frames"].shape[1]
+        pos = jnp.arange(s)
+        mask = (pos % MASK_EVERY) == (MASK_EVERY - 1)
+        mask = jnp.broadcast_to(mask[None], batch["frames"].shape[:2])
+        x = embed_inputs(cfg, params, frames=batch["frames"], mask=mask)
+        labels, loss_mask = batch["labels"], mask.astype(jnp.float32)
+    elif cfg.frontend == "vision_stub":
+        x = embed_inputs(cfg, params, tokens=tokens, patches=batch["patches"])
+        npatch = batch["patches"].shape[1]
+        # next-token prediction on the text region only
+        lab_txt = batch["labels"]
+        pad = jnp.zeros((tokens.shape[0], npatch), lab_txt.dtype)
+        labels = jnp.concatenate([pad, lab_txt], axis=1)
+        lm = jnp.concatenate([jnp.zeros_like(pad, jnp.float32),
+                              jnp.ones_like(lab_txt, jnp.float32)], axis=1)
+        loss_mask = lm
+    else:
+        x = embed_inputs(cfg, params, tokens=tokens)
+        labels = batch["labels"]
+        loss_mask = jnp.ones_like(labels, jnp.float32)
+
+    x, aux, experts = _run_stack(mesh, cfg, params, x, lina=lina,
+                                 dispatch_backend=dispatch_backend, fsdp=fsdp)
+    x = rms_norm(x, params.final_norm, cfg.norm_eps)
+    loss = chunked_ce_loss(mesh, x, unembed_weight(params), labels, loss_mask)
+    total = loss + cfg.moe.aux_loss_weight * 0 + aux  # aux already weighted
+    return ModelOutput(total, None, aux, experts, None)
+
+
+def forward_prefill(mesh, cfg, params: LMParams, batch: dict, *, lina=False,
+                    serve_plan=None, serve_top_k=None, fsdp=False,
+                    with_cache: bool = False) -> ModelOutput:
+    """Serving prefill: last-position logits (+ optional KV/state cache).
+
+    The dry-run lowers with_cache=False (cache construction is exercised by
+    the decode cells, whose input_specs carry the cache)."""
+    params = cast_for_compute(cfg, params)
+    if cfg.frontend == "audio_stub":
+        x = embed_inputs(cfg, params, frames=batch["frames"])
+    elif cfg.frontend == "vision_stub":
+        x = embed_inputs(cfg, params, tokens=batch["tokens"],
+                         patches=batch["patches"])
+    else:
+        x = embed_inputs(cfg, params, tokens=batch["tokens"])
+    x, aux, experts = _run_stack(mesh, cfg, params, x, lina=lina,
+                                 serve_plan=serve_plan, serve_top_k=serve_top_k,
+                                 fsdp=fsdp)
+    x = rms_norm(x, params.final_norm, cfg.norm_eps)
+    last = x[:, -1]
+    logits = last @ unembed_weight(params)
+    return ModelOutput(None, logits, aux, experts, None)
+
+
+# -- decode ------------------------------------------------------------------
+
+def init_cache(cfg, batch, seq_len, dtype=jnp.bfloat16) -> LMCache:
+    pos = jnp.zeros((batch,), jnp.int32)
+    if cfg.layer_pattern:
+        n_taps = sum(ch in "A*" for ch in cfg.layer_pattern)
+        kv = init_kv_cache(cfg, batch, seq_len, dtype)
+        kv = KVCache(jnp.broadcast_to(kv.k[None], (n_taps, *kv.k.shape)),
+                     jnp.broadcast_to(kv.v[None], (n_taps, *kv.v.shape)))
+        ms = ssm_mod.init_mamba_state(cfg, batch)
+        ms = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers, *a.shape)), ms)
+        return LMCache(kv, ms, None, pos)
+    if cfg.attention_free:
+        rs = rwkv_mod.init_rwkv_state(cfg, batch)
+        rs = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers, *a.shape)), rs)
+        return LMCache(None, None, rs, pos)
+    every = cfg.moe.every if cfg.moe.enabled else 1
+    n_groups = cfg.n_layers // every
+    kv = init_kv_cache(cfg, batch, seq_len, dtype)
+    kv = KVCache(
+        jnp.broadcast_to(kv.k[None, None], (n_groups, every, *kv.k.shape)),
+        jnp.broadcast_to(kv.v[None, None], (n_groups, every, *kv.v.shape)))
+    return LMCache(kv, None, None, pos)
+
+
+def decode_step(mesh, cfg, params: LMParams, cache: LMCache, token,
+                *, lina=False, serve_plan=None, serve_top_k=None,
+                fsdp=False) -> tuple:
+    """One decode step.  token: [B] int32.  Returns (logits [B,V], cache)."""
+    params = cast_for_compute(cfg, params)
+    dtype = jnp.dtype(cfg.dtype)
+    x = params.embed[token][:, None].astype(dtype)       # [B,1,d]
+    pos = cache.pos
+    b = token.shape[0]
+    d = cfg.d_model
+
+    if isinstance(params.stack, HybridParams):
+        hp = params.stack
+        taps = jnp.array([ch in "A*" for ch in cfg.layer_pattern], jnp.bool_)
+
+        def body(carry, inp):
+            x, kvt, tap_i = carry
+            mp, ln, ms_k, tap = inp
+            h = rms_norm(x, ln, cfg.norm_eps)
+            y, ms_new = ssm_mod.mamba_decode(mp, cfg, h, ms_k)
+
+            def run_tap(args):
+                x, kvt, tap_i = args
+                h = rms_norm(x, hp.ln_s1, cfg.norm_eps)
+                kv_i = jax.tree.map(lambda a: a[tap_i], kvt)
+                y, kv_new = decode_attention(mesh, hp.shared_attn, h, kv_i,
+                                             pos, cfg)
+                kvt = jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                        full, new, tap_i, 0), kvt, kv_new)
+                x = x + y
+                h2 = rms_norm(x, hp.ln_s2, cfg.norm_eps)
+                x = x + _ffn_apply(hp.shared_ffn, h2, cfg.ffn_type, mesh)
+                return x, kvt, tap_i + 1
+
+            x = x + y
+            x, kvt, tap_i = jax.lax.cond(tap, run_tap,
+                                         lambda a: a, (x, kvt, tap_i))
+            return (x, kvt, tap_i), ms_new
+
+        (x, kvt, _), ms_new = jax.lax.scan(
+            body, (x, cache.kv, jnp.zeros((), jnp.int32)),
+            (hp.mamba, hp.ln_m, cache.mamba, taps))
+        new_cache = LMCache(kvt, ms_new, None, pos + 1)
+    elif isinstance(params.stack, RWKVStack):
+        st = params.stack
+
+        def body(x, inp):
+            bp, l1, l2, rs = inp
+            h = rms_norm(x, l1, cfg.norm_eps)
+            # single-token time-mix via the chunked path (T=1); states are
+            # stored f32, cast at use so the scan carry stays compute-dtype
+            x_prev = rs.x_tm[:, None].astype(h.dtype)
+            lw, k, v, r, g = rwkv_mod._tm_projections(bp, cfg, h, x_prev)
+            hh, hd = rwkv_mod._heads(cfg)
+            y, sT = rwkv_mod.wkv_chunked(r, k, v, lw, bp.u, hh, hd, 1, rs.s)
+            y = rms_norm(y.astype(x.dtype) * g.astype(x.dtype), bp.ln_x,
+                         cfg.norm_eps)
+            x = x + y @ bp.wo
+            h2 = rms_norm(x, l2, cfg.norm_eps)
+            y2, last_cm = rwkv_mod.channel_mix(bp, h2,
+                                               rs.x_cm.astype(h2.dtype))
+            x = x + y2
+            return x, rwkv_mod.RWKVState(
+                sT, h[:, -1].astype(jnp.float32),
+                last_cm.astype(jnp.float32))
+
+        x, rs_new = jax.lax.scan(body, x, (st.blocks, st.ln1, st.ln2,
+                                           cache.rwkv))
+        new_cache = LMCache(None, None, rs_new, pos + 1)
+    else:
+        gp_stack = params.stack
+        every = cfg.moe.every if cfg.moe.enabled else 1
+
+        def body(x, inp):
+            gp, kv_g = inp
+            new_kvs = []
+            for j in range(every):
+                a_p = _tree_idx(gp.attn, j)
+                kv_j = jax.tree.map(lambda a: a[j], kv_g)
+                h = rms_norm(x, gp.ln1[j], cfg.norm_eps)
+                y, kv_new = decode_attention(mesh, a_p, h, kv_j, pos, cfg)
+                new_kvs.append(kv_new)
+                x = x + y
+                h = rms_norm(x, gp.ln2[j], cfg.norm_eps)
+                is_moe = cfg.moe.enabled and j == every - 1
+                if not is_moe:
+                    ffn_p = _tree_idx(gp.ffn, j) if (gp.ffn is not None and
+                                                     gp.ffn.w_in.ndim > 2) \
+                        else gp.ffn
+                    x = x + _ffn_apply(ffn_p, h, cfg.ffn_type, mesh,
+                                   cfg.tensor_parallel)
+                else:
+                    if serve_plan is not None:
+                        h2 = h.reshape(b, d)
+                        y2, _, _ = serve_moe_layer(
+                            mesh, h2, gp.moe, cfg.moe, serve_plan,
+                            ffn_type=cfg.ffn_type, top_k=serve_top_k)
+                        moe_y = y2.reshape(b, 1, d)
+                    else:
+                        moe_y = moe_layer(mesh, h, gp.moe, cfg.moe,
+                                          ffn_type=cfg.ffn_type, lina=lina,
+                                          fsdp=fsdp,
+                                          top_k=serve_top_k).y
+                    if gp.shared is not None:
+                        moe_y = moe_y + _ffn_apply(gp.shared, h, cfg.ffn_type,
+                                                   mesh)
+                    x = x + moe_y
+            kv_stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_kvs)
+            return x, kv_stacked
+
+        x, kv_new = jax.lax.scan(body, x, (gp_stack, cache.kv))
+        new_cache = LMCache(kv_new, None, None, pos + 1)
+
+    x = rms_norm(x, params.final_norm, cfg.norm_eps)
+    logits = x[:, 0] @ unembed_weight(params)
+    return logits, new_cache

@@ -1,0 +1,160 @@
+"""RWKV6 ("Finch") block: time-mix with data-dependent decay + channel-mix.
+
+Recurrence per head (hd-dim keys/values, diagonal data-dependent decay w_t):
+    y_t = r_t @ (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+Sequence path: chunk-vectorized — an inner scan over the chunk position
+(vectorized across all chunks) + an outer scan carrying cross-chunk state,
+so sequential depth is Q + T/Q instead of T.  Decode: single recurrent step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+LORA_R = 32  # low-rank size of the data-dependent decay
+
+
+class RWKVParams(NamedTuple):
+    # time-mix
+    mu: jax.Array        # [5, d]  token-shift lerp weights for w,k,v,r,g
+    w0: jax.Array        # [d]     decay base
+    w_a: jax.Array       # [d, R]  decay lora
+    w_b: jax.Array       # [R, d]
+    wk: jax.Array        # [d, d]
+    wv: jax.Array        # [d, d]
+    wr: jax.Array        # [d, d]
+    wg: jax.Array        # [d, d]
+    u: jax.Array         # [d]     bonus
+    wo: jax.Array        # [d, d]
+    ln_x: jax.Array      # [d]     group-norm-ish scale on the head outputs
+    # channel-mix
+    mu_c: jax.Array      # [2, d]
+    ck: jax.Array        # [d, f]
+    cv: jax.Array        # [f, d]
+    cr: jax.Array        # [d, d]
+
+
+class RWKVState(NamedTuple):
+    s: jax.Array         # [B, H, hd, hd] wkv state
+    x_tm: jax.Array      # [B, d] last token (time-mix shift)
+    x_cm: jax.Array      # [B, d] last token (channel-mix shift)
+
+
+def init_rwkv_params(key, cfg, dtype=jnp.float32) -> RWKVParams:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 10)
+    return RWKVParams(
+        mu=jnp.full((5, d), 0.5, dtype),
+        w0=jnp.full((d,), -2.0, dtype),
+        w_a=(jax.random.normal(ks[0], (d, LORA_R)) * 0.01).astype(dtype),
+        w_b=(jax.random.normal(ks[1], (LORA_R, d)) * 0.01).astype(dtype),
+        wk=dense_init(ks[2], (d, d), dtype=dtype),
+        wv=dense_init(ks[3], (d, d), dtype=dtype),
+        wr=dense_init(ks[4], (d, d), dtype=dtype),
+        wg=dense_init(ks[5], (d, d), dtype=dtype),
+        u=jnp.zeros((d,), dtype),
+        wo=dense_init(ks[6], (d, d), dtype=dtype),
+        ln_x=jnp.ones((d,), dtype),
+        mu_c=jnp.full((2, d), 0.5, dtype),
+        ck=dense_init(ks[7], (d, f), dtype=dtype),
+        cv=dense_init(ks[8], (f, d), dtype=dtype),
+        cr=dense_init(ks[9], (d, d), dtype=dtype),
+    )
+
+
+def _heads(cfg):
+    hd = cfg.ssm.head_dim
+    return cfg.d_model // hd, hd
+
+
+def _tm_projections(p: RWKVParams, cfg, x, x_prev):
+    """x: [B,T,d]; x_prev: same, shifted by one (data-dependent lerp)."""
+    mix = lambda i: x + (x_prev - x) * p.mu[i]
+    w_in, xk, xv, xr, xg = (mix(i) for i in range(5))
+    # data-dependent decay (lora): w in (0,1), log-decay lw < 0
+    lw = -jnp.exp(p.w0 + jnp.tanh(w_in.astype(jnp.float32) @ p.w_a) @ p.w_b)
+    k, v = xk @ p.wk, xv @ p.wv
+    r, g = xr @ p.wr, jax.nn.silu(xg @ p.wg)
+    return lw, k, v, r, g
+
+
+def wkv_chunked(r, k, v, lw, u, n_heads, hd, chunk, s0=None):
+    """Chunk-vectorized WKV.  r/k/v: [B,T,d]; lw: [B,T,d] log decays.
+    Returns (y [B,T,d], s_final [B,H,hd,hd])."""
+    bsz, t, d = r.shape
+    q = min(chunk, t)
+    while t % q:
+        q -= 1
+    nc = t // q
+    shp = (bsz, nc, q, n_heads, hd)
+    rr, kk, vv, ww = (a.astype(jnp.float32).reshape(shp) for a in (r, k, v, lw))
+    uu = u.astype(jnp.float32).reshape(n_heads, hd)
+
+    # inner scan over within-chunk position, vectorized over (B, NC, H)
+    def inner(carry, inp):
+        s_loc = carry                                   # [B,NC,H,hd,hd]
+        r_t, k_t, v_t, w_t = inp                        # [B,NC,H,hd]
+        kv = k_t[..., :, None] * v_t[..., None, :]      # [B,NC,H,hd,hd]
+        att = s_loc + uu[None, None, :, :, None] * kv
+        y_t = jnp.einsum("bnhk,bnhkv->bnhv", r_t, att)
+        s_new = jnp.exp(w_t)[..., None] * s_loc + kv
+        return s_new, y_t
+
+    seq = tuple(a.transpose(2, 0, 1, 3, 4) for a in (rr, kk, vv, ww))
+    s_loc0 = jnp.zeros((bsz, nc, n_heads, hd, hd), jnp.float32)
+    s_chunk, y_local = jax.lax.scan(inner, s_loc0, seq)
+    y_local = y_local.transpose(1, 2, 0, 3, 4)          # [B,NC,Q,H,hd]
+
+    # cross-chunk: carry state, apply decayed contribution per position.
+    lcum = jnp.cumsum(ww, axis=2)                       # [B,NC,Q,H,hd]
+    lprev = jnp.pad(lcum, ((0, 0), (0, 0), (1, 0), (0, 0), (0, 0)))[:, :, :-1]
+    if s0 is None:
+        s0 = jnp.zeros((bsz, n_heads, hd, hd), jnp.float32)
+
+    def outer(s, inp):
+        s_c, dec_q, r_dec = inp
+        # y_cross[t] = (r_t * exp(lprev_t)) @ s
+        y_c = jnp.einsum("bqhk,bhkv->bqhv", r_dec, s)
+        s_next = jnp.exp(dec_q)[..., None] * s + s_c
+        return s_next, y_c
+
+    r_dec = rr * jnp.exp(lprev)                          # [B,NC,Q,H,hd]
+    sT, y_cross = jax.lax.scan(
+        outer, s0, (s_chunk.transpose(1, 0, 2, 3, 4),
+                    lcum[:, :, -1].transpose(1, 0, 2, 3),
+                    r_dec.transpose(1, 0, 2, 3, 4)))
+    y = y_local + y_cross.transpose(1, 0, 2, 3, 4)
+    return y.reshape(bsz, t, d), sT
+
+
+def time_mix(p: RWKVParams, cfg, x, state: Optional[RWKVState] = None):
+    bsz, t, d = x.shape
+    h, hd = _heads(cfg)
+    x_last = state.x_tm[:, None] if state is not None else jnp.zeros_like(x[:, :1])
+    x_prev = jnp.concatenate([x_last, x[:, :-1]], axis=1)
+    lw, k, v, r, g = _tm_projections(p, cfg, x, x_prev)
+    s0 = state.s if state is not None else None
+    y, sT = wkv_chunked(r, k, v, lw, p.u, h, hd, cfg.ssm.chunk, s0)
+    y = rms_norm(y.astype(x.dtype) * g, p.ln_x, cfg.norm_eps)
+    return y @ p.wo, sT, x[:, -1]
+
+
+def channel_mix(p: RWKVParams, x, x_last=None):
+    first = jnp.zeros_like(x[:, :1]) if x_last is None else x_last[:, None]
+    x_prev = jnp.concatenate([first, x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * p.mu_c[0]
+    xr = x + (x_prev - x) * p.mu_c[1]
+    kk = jnp.square(jax.nn.relu(xk @ p.ck))
+    return jax.nn.sigmoid(xr @ p.cr) * (kk @ p.cv), x[:, -1]
+
+
+def init_rwkv_state(cfg, batch) -> RWKVState:
+    h, hd = _heads(cfg)
+    return RWKVState(jnp.zeros((batch, h, hd, hd), jnp.float32),
+                     jnp.zeros((batch, cfg.d_model), jnp.float32),
+                     jnp.zeros((batch, cfg.d_model), jnp.float32))

@@ -1,0 +1,171 @@
+"""Mamba2 (SSD) block: chunked matmul-form sequence path (train/prefill) and
+recurrent single-step decode path — the zamba2 backbone.
+
+SSD recurrence per head (P = head_dim, N = d_state, scalar decay per head):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (B_t ⊗ x_t)        h: [P, N]
+    y_t = h_t @ C_t + D * x_t
+The chunked form turns the intra-chunk part into lower-triangular matmuls
+(MXU-friendly; mirrored by the Pallas kernel in kernels/ssd.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+CONV_K = 4  # depthwise causal conv width
+
+
+class MambaParams(NamedTuple):
+    in_proj: jax.Array    # [d, 2*d_in + 2*N + H]  -> z, x, B, C, dt
+    conv_w: jax.Array     # [K, d_in + 2*N] depthwise
+    conv_b: jax.Array     # [d_in + 2*N]
+    a_log: jax.Array      # [H] log(-A)
+    d_skip: jax.Array     # [H]
+    dt_bias: jax.Array    # [H]
+    norm: jax.Array       # [d_in] gated RMSNorm scale
+    out_proj: jax.Array   # [d_in, d]
+
+
+class MambaState(NamedTuple):
+    h: jax.Array          # [B, H, P, N] SSM state
+    conv: jax.Array       # [B, K-1, d_in + 2*N] conv tail
+
+
+def dims(cfg):
+    d_in = cfg.ssm.expand * cfg.d_model
+    n_heads = d_in // cfg.ssm.head_dim
+    return d_in, n_heads, cfg.ssm.d_state, cfg.ssm.head_dim
+
+
+def init_mamba_params(key, cfg, dtype=jnp.float32) -> MambaParams:
+    d_in, h, n, p = dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    conv_ch = d_in + 2 * n
+    return MambaParams(
+        in_proj=dense_init(ks[0], (d, 2 * d_in + 2 * n + h), dtype=dtype),
+        conv_w=(jax.random.normal(ks[1], (CONV_K, conv_ch)) * 0.1).astype(dtype),
+        conv_b=jnp.zeros((conv_ch,), dtype),
+        a_log=jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        d_skip=jnp.ones((h,), dtype),
+        dt_bias=jnp.zeros((h,), dtype),
+        norm=jnp.ones((d_in,), dtype),
+        out_proj=dense_init(ks[2], (d_in, d), dtype=dtype),
+    )
+
+
+def _split_proj(cfg, proj):
+    d_in, h, n, p = dims(cfg)
+    z, xbc_dt = jnp.split(proj, [d_in], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_in + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, tail=None):
+    """Depthwise causal conv along time.  xbc: [B, T, C]; tail: [B, K-1, C]."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([tail, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(k)) + b
+    return jax.nn.silu(out), xp[:, -(k - 1):]
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int, h0=None):
+    """Chunked SSD.  x: [B,T,H,P]; dt: [B,T,H]; b,c: [B,T,N].
+    Returns (y [B,T,H,P], h_final [B,H,P,N])."""
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, t)
+    while t % q:
+        q -= 1
+    nc = t // q
+    a = -jnp.exp(a_log.astype(jnp.float32))                      # [H]
+    dt = jax.nn.softplus(dt.astype(jnp.float32))                 # [B,T,H]
+    la = dt * a[None, None, :]                                   # log-decay/step
+    xr = (x.astype(jnp.float32) * dt[..., None]).reshape(bsz, nc, q, h, p)
+    la = la.reshape(bsz, nc, q, h)
+    br = b.astype(jnp.float32).reshape(bsz, nc, q, n)
+    cr = c.astype(jnp.float32).reshape(bsz, nc, q, n)
+
+    l_cum = jnp.cumsum(la, axis=2)                               # [B,NC,Q,H]
+    # intra-chunk: M[t,s] = (c_t.b_s) * exp(L_t - L_s) for s<=t
+    rel = l_cum[:, :, :, None, :] - l_cum[:, :, None, :, :]      # [B,NC,Q,Q,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    m = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bnqk,bnsk->bnqs", cr, br)                   # [B,NC,Q,Q]
+    y_intra = jnp.einsum("bnqs,bnqsh,bnshp->bnqhp", cb, m, xr)
+
+    # chunk state: S = sum_s exp(L_Q - L_s) x_s b_s^T   -> [B,NC,H,P,N]
+    decay_to_end = jnp.exp(l_cum[:, :, -1:, :] - l_cum)          # [B,NC,Q,H]
+    s_chunk = jnp.einsum("bnqh,bnqhp,bnqk->bnhpk", decay_to_end, xr, br)
+
+    # cross-chunk scan over NC
+    chunk_decay = jnp.exp(l_cum[:, :, -1, :])                    # [B,NC,H]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(hprev, inp):
+        s_c, dec = inp                                           # [B,H,P,N],[B,H]
+        hnext = hprev * dec[..., None, None] + s_c
+        return hnext, hprev
+
+    hT, h_in = jax.lax.scan(step, h0,
+                            (s_chunk.transpose(1, 0, 2, 3, 4),
+                             chunk_decay.transpose(1, 0, 2)))
+    h_in = h_in.transpose(1, 0, 2, 3, 4)                         # [B,NC,H,P,N]
+    # y_cross[t] = exp(L_t) * (h_in @ c_t)
+    y_cross = jnp.einsum("bnqh,bnhpk,bnqk->bnqhp", jnp.exp(l_cum), h_in, cr)
+
+    y = (y_intra + y_cross).reshape(bsz, t, h, p)
+    y = y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+    return y, hT
+
+
+def mamba_block(p: MambaParams, cfg, x, state: Optional[MambaState] = None):
+    """Sequence path.  x: [B, T, d] -> (y, final MambaState)."""
+    bsz, t, d = x.shape
+    d_in, h, n, pd = dims(cfg)
+    z, xbc, dt = _split_proj(cfg, x @ p.in_proj)
+    conv_tail = state.conv if state is not None else None
+    xbc, tail = _causal_conv(xbc, p.conv_w, p.conv_b, conv_tail)
+    xs, b, c = jnp.split(xbc, [d_in, d_in + n], axis=-1)
+    xs = xs.reshape(bsz, t, h, pd)
+    dt = dt + p.dt_bias
+    h0 = state.h if state is not None else None
+    y, hT = ssd_chunked(xs, dt, p.a_log, b, c, p.d_skip, cfg.ssm.chunk, h0)
+    y = y.reshape(bsz, t, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p.norm, cfg.norm_eps)
+    return y @ p.out_proj, MambaState(hT, tail)
+
+
+def mamba_decode(p: MambaParams, cfg, x, state: MambaState):
+    """Single-token recurrent path.  x: [B, 1, d]."""
+    bsz = x.shape[0]
+    d_in, h, n, pd = dims(cfg)
+    z, xbc, dt = _split_proj(cfg, x[:, 0] @ p.in_proj)
+    # conv over stored tail + current input
+    xp = jnp.concatenate([state.conv, xbc[:, None]], axis=1)     # [B,K,C]
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", xp, p.conv_w) + p.conv_b)
+    xs, b, c = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+    xs = xs.reshape(bsz, h, pd)
+    dt = jax.nn.softplus((dt + p.dt_bias).astype(jnp.float32))   # [B,H]
+    a = -jnp.exp(p.a_log.astype(jnp.float32))
+    dec = jnp.exp(dt * a[None])                                  # [B,H]
+    upd = jnp.einsum("bhp,bk->bhpk", xs.astype(jnp.float32) * dt[..., None], b)
+    hnew = state.h * dec[..., None, None] + upd
+    y = jnp.einsum("bhpk,bk->bhp", hnew, c.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p.d_skip[None, :, None]
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z[:, None]), p.norm, cfg.norm_eps)
+    return y @ p.out_proj, MambaState(hnew, xp[:, 1:])
+
+
+def init_mamba_state(cfg, batch, dtype=jnp.float32) -> MambaState:
+    d_in, h, n, pd = dims(cfg)
+    return MambaState(jnp.zeros((batch, h, pd, n), jnp.float32),
+                      jnp.zeros((batch, CONV_K - 1, d_in + 2 * n), dtype))

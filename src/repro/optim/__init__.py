@@ -1,0 +1,8 @@
+"""Optimizer substrate: AdamW with mesh-sharded states, cosine schedule,
+global-norm clipping, and gradient compression for the DP axis."""
+from repro.optim.adamw import (AdamWConfig, OptState, init_opt_state,
+                               adamw_update, cosine_schedule,
+                               clip_by_global_norm)
+from repro.optim.compression import (compress_bf16, decompress_bf16,
+                                     Int8State, compress_int8_ef,
+                                     decompress_int8)

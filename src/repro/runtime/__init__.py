@@ -1,0 +1,3 @@
+"""Runtime: fault-tolerant Trainer and the two-phase MoE Server."""
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.server import MoEServer, ServerConfig

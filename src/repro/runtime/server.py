@@ -1,0 +1,206 @@
+"""Two-phase MoE serving runtime (paper §5/§6.2).
+
+Per MoE layer the Server:
+  phase 1: estimates next-layer expert popularity from each token's sample
+           path (PathProfile Ψ lookup — overlapped with compute on a real
+           cluster), plans placement (Eq. 1 + FFD replication/packing);
+  gate:    runs the actual gating network;
+  phase 2: compares top-2k estimated vs actual experts; on deviation,
+           re-plans from the actual popularity (blocking — the paper's
+           ~23% fine-tune case);
+  dispatch: executes the MoE layer; device loads under the final plan are
+           recorded for the latency model (numerics are placement-
+           independent — placement changes *time*, which benchmarks model
+           with the v5e constants; the distributed plan-honoring dispatch
+           itself is ``core.serving.serve_moe_layer``, exercised on a
+           multi-device mesh in tests).
+
+The Server drives real model weights (GroupParams stacks: the paper models,
+mixtral, llama4) and produces exact logits plus per-layer scheduling stats.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.moe import expert_ffn
+from repro.core.placement import (PlacementPlan, identity_plan,
+                                  needs_finetune, plan_placement)
+from repro.core.popularity import PathProfile
+from repro.models import lm as lm_mod
+from repro.models.attention import attention
+from repro.models.layers import rms_norm
+
+
+@dataclass
+class ServerConfig:
+    top_k: int = 1                 # paper: top-1 gating at inference
+    path_len: int = 3
+    max_pack: int = 4
+    n_devices: int = 0             # 0 => n_experts (paper: 1 expert/device)
+    use_estimation: bool = True    # ablation: False = schedule after gating
+    use_finetuning: bool = True    # ablation: False = never fine-tune
+    schedule_policy: str = "lina"  # lina | uniform (DeepSpeed baseline)
+
+
+@dataclass
+class LayerStats:
+    layer: int
+    est_pop: np.ndarray
+    actual_pop: np.ndarray
+    finetuned: bool
+    est_accurate: bool
+    device_load: np.ndarray        # estimated token share per device
+
+
+class MoEServer:
+    def __init__(self, cfg: ModelConfig, params, profile: PathProfile,
+                 scfg: ServerConfig = ServerConfig(), mesh=None):
+        assert cfg.moe.enabled, "MoEServer serves MoE architectures"
+        self.cfg = cfg
+        self.params = params
+        self.profile = profile
+        self.scfg = scfg
+        self.mesh = mesh
+        self.n_dev = scfg.n_devices or cfg.moe.n_experts
+        self.every = cfg.moe.every
+        self._attn = jax.jit(self._attn_fn)
+        self._gate = jax.jit(self._gate_fn)
+        self._moe = jax.jit(self._moe_fn)
+        self._ffn = jax.jit(partial(lm_mod._ffn_apply, ffn_type=cfg.ffn_type,
+                                    mesh=None))
+
+    # --- jitted layer pieces ----------------------------------------------
+    def _attn_fn(self, gp, j, x):
+        a_p = jax.tree.map(lambda a: a[j] if a is not None else None, gp.attn,
+                           is_leaf=lambda a: a is None)
+        h = rms_norm(x, gp.ln1[j], self.cfg.norm_eps)
+        y, _ = attention(None, a_p, h, self.cfg)
+        return x + y
+
+    def _gate_fn(self, router, h2):
+        logits = h2 @ router
+        probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+        _, idx = jax.lax.top_k(probs, self.scfg.top_k)
+        return probs, idx.astype(jnp.int32)
+
+    def _moe_fn(self, moe_p, h2, probs):
+        """Dense per-expert evaluation + gated combine (placement changes
+        time, not values — loads are modeled from the plan separately)."""
+        w, idx = jax.lax.top_k(probs, self.scfg.top_k)
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+        e = self.cfg.moe.n_experts
+        onehot = jax.nn.one_hot(idx, e, dtype=h2.dtype)           # [T,k,E]
+        xw = jnp.einsum("tke,tk->te", onehot, w.astype(h2.dtype))  # [T,E]
+        xe_raw = jnp.broadcast_to(h2[None], (e, *h2.shape))
+        ye = expert_ffn(moe_p.wi, moe_p.wu, moe_p.wo, xe_raw,
+                        self.cfg.ffn_type)                        # [E,T,d]
+        return jnp.einsum("te,etd->td", xw, ye)
+
+    # --- serving loop -------------------------------------------------------
+    def serve(self, tokens: np.ndarray) -> tuple:
+        """tokens: [B, S] -> (last logits [B, V], stats list[LayerStats])."""
+        cfg, scfg = self.cfg, self.scfg
+        params = lm_mod.cast_for_compute(cfg, self.params)
+        x = params.embed[jnp.asarray(tokens)].astype(jnp.dtype(cfg.dtype))
+        b, s, d = x.shape
+        t = b * s
+        path_ids = np.zeros((t,), np.int64)
+        stats = []
+        n_groups = cfg.n_layers // self.every
+        moe_layer_idx = 0
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda a: a[g] if a is not None else None,
+                              self.params.stack, is_leaf=lambda a: a is None)
+            gp = lm_mod.cast_for_compute(cfg, lm_mod.LMParams(
+                params.embed, None, None, None, gp, params.final_norm, None)
+            ).stack
+            for j in range(self.every):
+                x = self._attn(gp, j, x)
+                h = rms_norm(x, gp.ln2[j], cfg.norm_eps)
+                is_moe = j == self.every - 1
+                if not is_moe:
+                    ffn_p = jax.tree.map(lambda a: a[j] if a is not None else
+                                         None, gp.ffn,
+                                         is_leaf=lambda a: a is None) \
+                        if gp.ffn is not None and gp.ffn.w_in.ndim > 2 else gp.ffn
+                    x = x + self._ffn(ffn_p, h)
+                    continue
+                h2 = h.reshape(t, d)
+                li = moe_layer_idx
+
+                # phase 1: estimate + plan before gating
+                if scfg.schedule_policy == "uniform":
+                    est = np.full((cfg.moe.n_experts,),
+                                  1.0 / cfg.moe.n_experts, np.float32)
+                elif scfg.use_estimation and li >= scfg.path_len:
+                    est = self.profile.estimate_popularity(li, path_ids)
+                else:
+                    est = np.full((cfg.moe.n_experts,),
+                                  1.0 / cfg.moe.n_experts, np.float32)
+
+                probs, idx = self._gate(gp.moe.router, h2)
+                top1 = np.asarray(idx[:, 0])
+                actual = np.bincount(top1, minlength=cfg.moe.n_experts
+                                     ).astype(np.float64)
+                actual = actual / max(actual.sum(), 1.0)
+
+                finetuned = False
+                accurate = not needs_finetune(est, actual, scfg.top_k)
+                if scfg.schedule_policy == "uniform":
+                    plan = identity_plan(cfg.moe.n_experts, self.n_dev,
+                                         scfg.max_pack)
+                else:
+                    basis = est
+                    if not scfg.use_estimation:
+                        basis, finetuned = actual, False
+                    plan = plan_placement(basis, self.n_dev, scfg.max_pack)
+                    if scfg.use_estimation and scfg.use_finetuning and \
+                            not accurate:
+                        plan = plan_placement(actual, self.n_dev,
+                                              scfg.max_pack)
+                        finetuned = True
+                # loads are always evaluated against the ACTUAL popularity —
+                # the plan decides placement, the workload decides load
+                plan = PlacementPlan(plan.slot_expert, plan.replica_of,
+                                     plan.n_replicas,
+                                     actual.astype(np.float32))
+
+                y = self._moe(gp.moe, h2, probs)
+                moe_y = y.reshape(b, s, d)
+                if gp.shared is not None:
+                    moe_y = moe_y + self._ffn(gp.shared, h)
+                x = x + moe_y
+
+                stats.append(LayerStats(li, np.asarray(est),
+                                        np.asarray(actual), finetuned,
+                                        accurate, plan.device_load()))
+                path_ids = (path_ids * cfg.moe.n_experts + top1) \
+                    % self.profile.n_buckets
+                moe_layer_idx += 1
+        x = rms_norm(x, lm_mod.cast_for_compute(cfg, self.params).final_norm,
+                     cfg.norm_eps)
+        logits = x[:, -1] @ lm_mod.unembed_weight(params)
+        return np.asarray(logits), stats
+
+
+def profile_from_training(cfg: ModelConfig, params, batches,
+                          path_len: int = 3, mesh=None) -> PathProfile:
+    """Profiling stage (§5.2): replay data through the model, collect
+    per-layer top-1 expert choices, accumulate Ψ tables."""
+    n_moe = cfg.n_moe_layers
+    prof = PathProfile(n_layers=n_moe, n_experts=cfg.moe.n_experts,
+                       path_len=path_len)
+    fwd = jax.jit(lambda p, b: lm_mod.forward_train(
+        mesh, cfg, p, b, lina=False).expert_choices)
+    for batch in batches:
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        choices = np.asarray(fwd(params, b))       # [n_moe, T]
+        prof.profile_batch(choices)
+    return prof

@@ -1,0 +1,92 @@
+"""Gating + dispatch invariants (unit + hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dispatch as D
+from repro.core.gating import capacity, top_k_gating
+
+
+def _gate(t=64, e=8, k=2, cf=2.0, seed=0):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (t, e))
+    cap = capacity(t, e, k, cf)
+    return logits, top_k_gating(logits, k, cap), cap
+
+
+def test_gating_shapes_and_ranges():
+    logits, g, cap = _gate()
+    t, e = logits.shape
+    assert g.expert_idx.shape == (t, 2) and g.expert_idx.min() >= 0
+    assert int(g.expert_idx.max()) < e
+    assert g.gate_weights.shape == (t, 2)
+    assert float(g.aux_loss) > 0
+    # kept tokens' weights sum to ~1; fully-dropped tokens sum to 0
+    ws = np.asarray(g.gate_weights.sum(-1))
+    kept = ~np.asarray(g.dropped).all(-1)
+    assert np.all((ws[kept] > 0.4) & (ws[kept] <= 1.0 + 1e-6))
+
+
+def test_gating_positions_unique_per_expert():
+    """No two tokens may claim the same (expert, position) slot."""
+    _, g, cap = _gate(t=128, e=4, k=2, cf=4.0)
+    idx = np.asarray(g.expert_idx).reshape(-1)
+    pos = np.asarray(g.position).reshape(-1)
+    dropped = np.asarray(g.dropped).reshape(-1)
+    slots = [(e, p) for e, p, d in zip(idx, pos, dropped) if not d]
+    assert len(slots) == len(set(slots))
+
+
+def test_capacity_drops():
+    """With a tiny capacity factor, exactly cap tokens survive per expert."""
+    t, e, k = 256, 2, 1
+    logits = jnp.zeros((t, e)).at[:, 0].set(10.0)  # everyone wants expert 0
+    cap = 8
+    g = top_k_gating(logits, k, cap)
+    kept = (~np.asarray(g.dropped)[:, 0]) & (np.asarray(g.expert_idx)[:, 0] == 0)
+    assert kept.sum() == cap
+
+
+@given(t=st.sampled_from([16, 64]), e=st.sampled_from([4, 8]),
+       k=st.sampled_from([1, 2]), seed=st.integers(0, 50))
+@settings(max_examples=20, deadline=None)
+def test_dispatch_backends_equivalent(t, e, k, seed):
+    """einsum (oracle) and scatter (production) dispatch/combine agree."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (t, 16))
+    logits = jax.random.normal(jax.random.PRNGKey(seed + 1), (t, e))
+    cap = capacity(t, e, k, 2.0)
+    g = top_k_gating(logits, k, cap)
+    b1 = D.dispatch_einsum(x, g, e, cap)
+    b2 = D.dispatch_scatter(x, g, e, cap)
+    np.testing.assert_allclose(b1, b2, atol=1e-5)
+    buf = jax.random.normal(jax.random.PRNGKey(seed + 2), (e, cap, 16))
+    y1 = D.combine_einsum(buf, g, e, cap)
+    y2 = D.combine_scatter(buf, g, e, cap)
+    np.testing.assert_allclose(y1, y2, atol=1e-4, rtol=1e-3)
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_dispatch_combine_roundtrip(seed):
+    """combine(dispatch(x)) with identity experts == gate-weighted x for
+    non-dropped tokens (the residual invariant the MoE layer relies on)."""
+    t, e, k, d = 32, 8, 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(seed), (t, d))
+    logits = jax.random.normal(jax.random.PRNGKey(seed + 1), (t, e))
+    cap = capacity(t, e, k, 4.0)
+    g = top_k_gating(logits, k, cap)
+    buf = D.dispatch_scatter(x, g, e, cap)
+    y = D.combine_scatter(buf, g, e, cap)
+    w = np.where(np.asarray(g.dropped), 0, np.asarray(g.gate_weights)).sum(-1)
+    np.testing.assert_allclose(np.asarray(y), w[:, None] * np.asarray(x),
+                               atol=1e-4)
+
+
+def test_aux_loss_balanced_lower_than_skewed():
+    t, e = 512, 8
+    balanced = jax.random.normal(jax.random.PRNGKey(0), (t, e)) * 0.01
+    skewed = jnp.zeros((t, e)).at[:, 0].set(8.0)
+    cap = capacity(t, e, 1, 2.0)
+    a_b = float(top_k_gating(balanced, 1, cap).aux_loss)
+    a_s = float(top_k_gating(skewed, 1, cap).aux_loss)
+    assert a_s > a_b

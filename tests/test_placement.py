@@ -1,0 +1,67 @@
+"""Placement planner invariants (Eq. 1 + FFD + two-phase), with hypothesis."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.placement import (identity_plan, needs_finetune,
+                                  plan_placement, two_phase_plan)
+
+
+@given(e=st.sampled_from([4, 8, 16]), seed=st.integers(0, 200),
+       conc=st.sampled_from([0.2, 0.5, 1.0]))
+@settings(max_examples=60, deadline=None)
+def test_plan_invariants(e, seed, conc):
+    rng = np.random.RandomState(seed)
+    pop = rng.dirichlet(np.ones(e) * conc)
+    n_dev = e
+    plan = plan_placement(pop, n_dev, max_pack=4)
+    # every expert is hosted at least once
+    assert (plan.n_replicas >= 1).all()
+    # replica slots are consistent with slot_expert
+    for ex in range(e):
+        for r in range(plan.n_replicas[ex]):
+            slot = plan.replica_of[ex, r]
+            d, s = divmod(int(slot), plan.max_pack)
+            assert plan.slot_expert[d, s] == ex
+    # no device hosts more than max_pack experts
+    assert ((plan.slot_expert >= 0).sum(axis=1) <= plan.max_pack).all()
+
+
+@given(e=st.sampled_from([8, 16]), seed=st.integers(0, 100))
+@settings(max_examples=40, deadline=None)
+def test_plan_balances_skewed_load(e, seed):
+    """Lina's plan must beat uniform placement on skewed popularity
+    (paper Fig. 16-18: the whole point of §5)."""
+    rng = np.random.RandomState(seed)
+    pop = rng.dirichlet(np.ones(e) * 0.15)       # heavily skewed
+    n_dev = e
+    lina = plan_placement(pop, n_dev, max_pack=4)
+    base = identity_plan(e, n_dev, max_pack=4)
+    base = type(base)(base.slot_expert, base.replica_of, base.n_replicas,
+                      pop.astype(np.float32))
+    assert lina.device_load().max() <= base.device_load().max() + 1e-9
+
+
+def test_two_phase_finetune_trigger():
+    e = 8
+    est = np.array([.4, .3, .1, .05, .05, .04, .03, .03])
+    same = est + 1e-3
+    assert not needs_finetune(est, same, top_k=1)
+    flipped = est[::-1].copy()
+    assert needs_finetune(est, flipped, top_k=1)
+    _, ft = two_phase_plan(est, flipped, e, top_k=1)
+    assert ft
+    _, ft = two_phase_plan(est, same, e, top_k=1)
+    assert not ft
+
+
+def test_identity_plan_layout():
+    plan = identity_plan(8, 4, max_pack=2)
+    assert (plan.slot_expert == np.array([[0, 1], [2, 3], [4, 5], [6, 7]])).all()
+    assert (plan.n_replicas == 1).all()
+
+
+def test_replication_of_hot_expert():
+    pop = np.array([0.7] + [0.3 / 7] * 7)
+    plan = plan_placement(pop, 8, max_pack=4)
+    assert plan.n_replicas[0] >= 2         # hot expert replicated
+    assert plan.device_load().max() < 0.7  # and its load split
