@@ -25,6 +25,7 @@ def all_benchmarks():
         ("fig16", infer_side.fig16_inference_time),
         ("table5", infer_side.table5_path_length),
         ("fig19", infer_side.fig19_estimation_accuracy),
+        ("traffic", infer_side.traffic_skewed_bursty),
     ]
 
 

@@ -1,6 +1,7 @@
 """Serving scenario: profile expert-selection paths on 'training' data, then
-serve batched requests with Lina's two-phase popularity scheduling, and
-compare against the uniform (DeepSpeed-style) placement.
+serve a bursty request trace through the continuous-batching engine with
+Lina's two-phase popularity scheduling, and compare against the uniform
+(DeepSpeed-style) placement on latency, load balance, and plan reuse.
 
     PYTHONPATH=src python examples/serve_popularity.py
 """
@@ -13,6 +14,7 @@ import numpy as np
 from repro.configs import get_config, with_experts, TRANSFORMER_XL
 from repro.data import DataConfig, SyntheticLM
 from repro.models import lm as lm_mod
+from repro.runtime.engine import EngineConfig, ServingEngine, simulate
 from repro.runtime.server import MoEServer, ServerConfig, profile_from_training
 
 
@@ -36,17 +38,28 @@ def main():
     prof = profile_from_training(cfg, params,
                                  (ds.batch(i) for i in range(4)), path_len=3)
 
+    # bursty trace: 16 requests, Poisson arrivals at ~25 req/s virtual
+    trng = np.random.RandomState(7)
+    t, trace = 0.0, []
+    for _ in range(16):
+        t += trng.exponential(1 / 25.0)
+        trace.append((trng.randint(0, cfg.vocab_size, (64,)), t))
+
     for policy in ("uniform", "lina"):
         srv = MoEServer(cfg, params, prof,
                         ServerConfig(path_len=3, schedule_policy=policy))
-        loads, fts, accs = [], [], []
-        for b in range(4):
-            _, stats = srv.serve(ds.batch(100 + b)["tokens"])
-            loads += [s.device_load.max() for s in stats]
-            fts += [s.finetuned for s in stats]
-            accs += [s.est_accurate for s in stats]
-        print(f"{policy:8s}: max-device-load {np.mean(loads):.3f} "
-              f"(ideal {1/16:.3f})  fine-tune {np.mean(fts):.0%}  "
+        eng = ServingEngine(srv, EngineConfig(max_batch_tokens=256,
+                                              max_batch_requests=4))
+        results = simulate(eng, trace)
+        lat = np.array([r.latency for r in results])
+        loads = [s.device_load.max() for s in eng.layer_stats]
+        fts = [s.finetuned for s in eng.layer_stats]
+        accs = [s.est_accurate for s in eng.layer_stats]
+        print(f"{policy:8s}: p50 {np.percentile(lat, 50)*1e3:6.1f} ms  "
+              f"p95 {np.percentile(lat, 95)*1e3:6.1f} ms  "
+              f"max-device-load {np.mean(loads):.3f} (ideal {1/16:.3f})  "
+              f"plan-reuse {eng.plan_reuse_rate:.0%}  "
+              f"fine-tune {np.mean(fts):.0%}  "
               f"est-accuracy {np.mean(accs):.0%}")
 
 

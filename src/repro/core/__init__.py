@@ -14,9 +14,12 @@ from repro.core.microop import (
     chunked_all_to_all, pipelined_expert_ffn, prioritized_chunked_reduce,
     ordered_after, all_to_all_ec, all_to_all_ec_inverse,
 )
-from repro.core.popularity import PathProfile, rolling_path_id, estimation_accuracy
+from repro.core.popularity import (PathProfile, rolling_path_id,
+                                   estimation_accuracy, top2k_sets_match)
 from repro.core.placement import (
-    PlacementPlan, plan_placement, identity_plan, needs_finetune, two_phase_plan,
+    PlacementPlan, PlanCache, PlanCacheStats, plan_placement, identity_plan,
+    needs_finetune, two_phase_plan,
 )
 from repro.core.packing import choose_packing, PackingDecision
-from repro.core.serving import PlanArrays, serve_moe_layer, route_to_slots
+from repro.core.serving import (PlanArrays, serve_moe_layer, route_to_slots,
+                                slot_capacity)

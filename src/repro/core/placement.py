@@ -15,10 +15,12 @@ which is exactly the paper's 'coordinate all-to-all correspondingly'.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import List, Optional
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
 
 import numpy as np
+
+from repro.core.popularity import top2k_sets_match
 
 
 @dataclass(frozen=True)
@@ -36,11 +38,15 @@ class PlacementPlan:
     def max_pack(self) -> int:
         return self.slot_expert.shape[1]
 
-    def device_load(self) -> np.ndarray:
-        """Estimated token share per device under this plan."""
-        e = self.popularity.shape[0]
+    def device_load(self, popularity: Optional[np.ndarray] = None
+                    ) -> np.ndarray:
+        """Token share per device under this plan.  By default evaluated
+        against the popularity the plan was built from; pass the *actual*
+        popularity to score the plan against the realized workload."""
+        pop = self.popularity if popularity is None else \
+            np.asarray(popularity, np.float64)
         load = np.zeros((self.n_devices,), np.float64)
-        share = self.popularity / np.maximum(self.n_replicas, 1)
+        share = pop / np.maximum(self.n_replicas, 1)
         for d in range(self.n_devices):
             for s in range(self.max_pack):
                 ex = self.slot_expert[d, s]
@@ -130,11 +136,9 @@ def plan_placement(popularity: np.ndarray, n_devices: int, max_pack: int = 4,
 
 def needs_finetune(est_pop: np.ndarray, actual_pop: np.ndarray,
                    top_k: int) -> bool:
-    """Phase 2 (§5.2): fine-tune iff top-2k estimated != top-2k actual."""
-    kk = min(2 * top_k, est_pop.shape[-1])
-    est = set(np.argsort(-est_pop)[:kk].tolist())
-    act = set(np.argsort(-actual_pop)[:kk].tolist())
-    return est != act
+    """Phase 2 (§5.2): fine-tune iff top-2k estimated != top-2k actual.
+    Delegates to the canonical check in ``core.popularity``."""
+    return not top2k_sets_match(est_pop, actual_pop, top_k)
 
 
 def two_phase_plan(est_pop: np.ndarray, actual_pop: Optional[np.ndarray],
@@ -145,3 +149,51 @@ def two_phase_plan(est_pop: np.ndarray, actual_pop: Optional[np.ndarray],
     if actual_pop is not None and needs_finetune(est_pop, actual_pop, top_k):
         return plan_placement(actual_pop, n_devices, max_pack), True
     return plan, False
+
+
+@dataclass
+class PlanCacheStats:
+    hits: int = 0
+    misses: int = 0
+    invalidations: int = 0      # misses caused by popularity drift
+
+    @property
+    def reuse_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+@dataclass
+class PlanCache:
+    """Per-MoE-layer PlacementPlan cache for the serving engine.
+
+    Phase-1 planning amortizes across batches: a layer's cached plan is
+    reused while the top-2k set of the incoming popularity estimate still
+    matches the top-2k set of the popularity the plan was built from (the
+    same §5.2 drift criterion as the phase-2 fine-tune check).  On drift the
+    entry is invalidated and the caller re-plans.
+    """
+
+    top_k: int = 1
+    _plans: Dict[int, PlacementPlan] = field(default_factory=dict)
+    stats: PlanCacheStats = field(default_factory=PlanCacheStats)
+
+    def lookup(self, layer: int, popularity: np.ndarray
+               ) -> Optional[PlacementPlan]:
+        plan = self._plans.get(layer)
+        if plan is None:
+            self.stats.misses += 1
+            return None
+        if top2k_sets_match(plan.popularity, popularity, self.top_k):
+            self.stats.hits += 1
+            return plan
+        self.stats.invalidations += 1
+        self.stats.misses += 1
+        del self._plans[layer]
+        return None
+
+    def store(self, layer: int, plan: PlacementPlan) -> None:
+        self._plans[layer] = plan
+
+    def clear(self) -> None:
+        self._plans.clear()

@@ -112,11 +112,20 @@ class PathProfile:
                    counts=z["counts"])
 
 
-def estimation_accuracy(est_pop: np.ndarray, actual_pop: np.ndarray,
-                        k: int) -> bool:
-    """Paper's phase-2 check: top-2k estimated experts == top-2k actual
-    (as *sets*; §5.2 'comparing the overall top-2k experts')."""
+def top2k_sets_match(est_pop: np.ndarray, actual_pop: np.ndarray,
+                     k: int) -> bool:
+    """The §5.2 top-2k check, the repo's single implementation: True iff the
+    top-2k estimated experts equal the top-2k actual experts (as *sets*;
+    'comparing the overall top-2k experts').  Shared by the phase-2
+    fine-tune trigger (``placement.needs_finetune``), the accuracy metric,
+    and plan-cache invalidation."""
     kk = min(2 * k, est_pop.shape[-1])
     est = set(np.argsort(-est_pop)[:kk].tolist())
     act = set(np.argsort(-actual_pop)[:kk].tolist())
     return est == act
+
+
+def estimation_accuracy(est_pop: np.ndarray, actual_pop: np.ndarray,
+                        k: int) -> bool:
+    """Accuracy metric (Fig. 19 / Table 5): alias of the §5.2 check."""
+    return top2k_sets_match(est_pop, actual_pop, k)

@@ -47,18 +47,43 @@ def route_to_slots(expert_idx: jax.Array, position: jax.Array,
                                axis=-1)[..., 0]
 
 
+def slot_capacity(cap: int, min_replicas: int) -> int:
+    """Per (device, sub-slot) buffer capacity under replication.
+
+    An expert with r replicas round-robins its <= ``cap`` tokens over r
+    slots, so each slot needs only ceil(cap / r); sizing by the *minimum*
+    replica count across hosted experts is safe for every slot.  Floored at
+    8 to keep the scatter MXU-aligned.  Must be static (shapes depend on
+    it), hence an int argument rather than a plan-array lookup.
+    """
+    return max(8, -(-cap // max(1, min_replicas)))
+
+
+def dp_shard_count(mesh, n_tokens: int) -> int:
+    """The data-parallel factor ``serve_moe_layer`` shards tokens by (1 when
+    the token count does not tile the dp axes)."""
+    if mesh is None:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_n = sizes.get("pod", 1) * sizes.get("data", 1)
+    return dp_n if n_tokens % dp_n == 0 else 1
+
+
 def _serve_body(x, router, wi, wu, wo, plan: PlanArrays, *, cfg: MoEConfig,
-                ffn_type: str, ep_axis: str, top_k: int):
+                ffn_type: str, ep_axis: str, top_k: int,
+                min_replicas: int = 1, cap_override: int = 0):
     """x: [T_local, d]; wi/wu/wo sharded expert-major over ep_axis."""
     t_local, d_model = x.shape
     e = cfg.n_experts
     ep = lax.psum(1, ep_axis)
     n_dev, s_pack = plan.slot_expert.shape
-    cap = capacity(t_local, e, top_k, cfg.capacity_factor)
-    slot_cap = max(8, -(-cap // 1))          # per (device, sub-slot) capacity
+    cap = cap_override or capacity(t_local, e, top_k, cfg.capacity_factor)
+    slot_cap = slot_capacity(cap, min_replicas)
 
     logits = x @ router
-    g = top_k_gating(logits, top_k, slot_cap, cfg.aux_loss_weight)
+    # gating capacity stays per-expert (cap); the per-slot limit is enforced
+    # below after tokens are spread over the expert's replicas
+    g = top_k_gating(logits, top_k, cap, cfg.aux_loss_weight)
 
     # --- route to replica slots instead of home experts -------------------
     slots = route_to_slots(g.expert_idx, g.position, plan)      # [T, k]
@@ -121,18 +146,25 @@ def _serve_body(x, router, wi, wu, wo, plan: PlanArrays, *, cfg: MoEConfig,
 
 def serve_moe_layer(mesh, x, params: MoEParams, cfg: MoEConfig,
                     plan: PlanArrays, *, ffn_type: str = "swiglu",
-                    top_k: int | None = None):
-    """Inference MoE layer honoring a placement plan.  x: [T, d] global."""
+                    top_k: int | None = None, min_replicas: int = 1,
+                    cap_override: int = 0):
+    """Inference MoE layer honoring a placement plan.  x: [T, d] global.
+
+    ``min_replicas`` is the minimum live replica count across experts in
+    ``plan`` (static; callers with a host-side PlacementPlan pass
+    ``int(plan.n_replicas.min())``) — it shrinks per-slot buffers to
+    ceil(cap / min_replicas).  ``cap_override`` (static, per-device) pins
+    the per-expert gating capacity; callers serving right-padded batches
+    use it to size capacity from the *valid* token count so padding rows
+    cannot change real tokens' dispatch.
+    """
     if mesh is None:
         from repro.core.moe import default_mesh
         mesh = default_mesh()
     has_pod = "pod" in mesh.axis_names
     dp = ("pod", "data") if has_pod else ("data",)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    dp_n = 1
-    for a in dp:
-        dp_n *= sizes.get(a, 1)
-    bspec = P(dp, None) if x.shape[0] % dp_n == 0 else P(None, None)
+    dp_n = dp_shard_count(mesh, x.shape[0])
+    bspec = P(dp, None) if dp_n > 1 else P(None, None)
     wspec = P("model", None, None)
     k = top_k if top_k is not None else max(cfg.top_k, 1)
     has_wu = params.wu is not None
@@ -142,7 +174,9 @@ def serve_moe_layer(mesh, x, params: MoEParams, cfg: MoEConfig,
         plan_arr = PlanArrays(se, ro, nr)
         return _serve_body(x, router, wi, wu_ if has_wu else None, wo,
                            plan_arr, cfg=cfg, ffn_type=ffn_type,
-                           ep_axis="model", top_k=k)
+                           ep_axis="model", top_k=k,
+                           min_replicas=min_replicas,
+                           cap_override=cap_override)
 
     y, eidx, probs = shard_map(
         wrapped, mesh=mesh,

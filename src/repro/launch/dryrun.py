@@ -22,7 +22,7 @@ import numpy as np
 from repro.configs import (REGISTRY, SHAPES, V5E, applicable_shapes,
                            get_config, skip_reason)
 from repro.launch.mesh import (make_production_mesh, arch_mesh, dp_size,
-                               ep_size)
+                               ep_size, mesh_context)
 from repro.launch.sharding import (batch_specs, cache_specs, opt_state_specs,
                                    param_specs, serve_param_specs,
                                    shardings_for)
@@ -70,13 +70,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, lina: bool = True,
         # decode hillclimb: split `model` into (kv-heads x seq) so the KV
         # cache shards fully AND the per-step cache update stays local
         import jax.sharding as jsh
+        from repro.launch.mesh import axis_types_kwargs
         kvh = cfg.n_kv_heads
         shp = ((2, 16, kvh, 16 // kvh) if multi_pod
                else (16, kvh, 16 // kvh))
         axes = (("pod", "data", "model", "tp") if multi_pod
                 else ("data", "model", "tp"))
         mesh = jsh.Mesh(mesh.devices.reshape(shp), axes,
-                        axis_types=(jsh.AxisType.Auto,) * len(axes))
+                        **axis_types_kwargs(len(axes)))
     n_chips = mesh.size
     specs = input_specs(cfg, shape)
     if shape.kind == "train":
@@ -86,7 +87,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, lina: bool = True,
     p_shard = shardings_for(mesh, pspec, specs["params"])
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         if shape.kind == "train":
             step = make_train_step(cfg, mesh, lina=lina, fsdp=True,
                                    microbatches=microbatches)
@@ -150,6 +151,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, lina: bool = True,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):     # jax<=0.4.x returns [dict]
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = collective_summary(hlo)
     ana = analytic_cost(cfg, shape)

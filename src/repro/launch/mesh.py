@@ -5,17 +5,39 @@ from __future__ import annotations
 import jax
 
 
+def mesh_context(mesh):
+    """Activate ``mesh`` as the ambient mesh, across JAX versions.
+
+    Newer JAX spells this ``jax.set_mesh`` (or ``jax.sharding.use_mesh``);
+    the pinned 0.4.x only offers ``Mesh.__enter__``.  All three return a
+    context manager, so callers write ``with mesh_context(mesh):``.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if use_mesh is not None:
+        return use_mesh(mesh)
+    return mesh  # Mesh is itself a context manager
+
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """``axis_types=(Auto,)*n`` where the JAX version has AxisType; {} on
+    the pinned 0.4.x (whose meshes are implicitly fully auto)."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return {} if at is None else {"axis_types": (at.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary (test-sized) mesh with the same axis conventions."""
     return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+                         **axis_types_kwargs(len(axes)))
 
 
 def dp_size(mesh) -> int:
@@ -50,4 +72,4 @@ def arch_mesh(cfg, *, multi_pod: bool = False):
         ("data", "model", "tp")
     import jax.sharding as jsh
     return jsh.Mesh(mesh.devices.reshape(shape), axes,
-                    axis_types=(jsh.AxisType.Auto,) * len(axes))
+                    **axis_types_kwargs(len(axes)))

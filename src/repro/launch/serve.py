@@ -1,8 +1,10 @@
-"""Serving driver: profile expert-selection paths, then serve batched
-requests with Lina's two-phase popularity scheduling.
+"""Serving driver: profile expert-selection paths, then serve a request
+trace through the continuous-batching engine with Lina's two-phase
+popularity scheduling (queue -> micro-batch -> plan cache -> distributed
+dispatch).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gpt2-moe-smoke \
-        --batches 10 --batch 4 --seq 64 [--policy uniform|lina]
+        --requests 24 --seq 64 --rate 20 [--policy uniform|lina]
 """
 from __future__ import annotations
 
@@ -13,6 +15,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticLM
 from repro.models import lm as lm_mod
+from repro.runtime.engine import EngineConfig, ServingEngine, simulate
 from repro.runtime.server import MoEServer, ServerConfig, profile_from_training
 
 import jax
@@ -21,12 +24,19 @@ import jax
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--batches", type=int, default=5)
+    ap.add_argument("--requests", type=int, default=20,
+                    help="number of requests in the Poisson trace")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="mean arrival rate (requests per virtual second)")
     ap.add_argument("--profile-batches", type=int, default=5)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch-tokens", type=int, default=256,
+                    help="engine micro-batch token budget")
+    ap.add_argument("--batch-requests", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--path-len", type=int, default=3)
     ap.add_argument("--policy", default="lina", choices=["lina", "uniform"])
+    ap.add_argument("--no-plan-cache", action="store_true",
+                    help="ablation: re-plan every layer of every batch")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -34,7 +44,7 @@ def main(argv=None):
     assert cfg.moe.enabled, "serve driver targets MoE archs"
     params = lm_mod.init_params(cfg, jax.random.PRNGKey(args.seed))
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
-                      global_batch=args.batch, seed=args.seed)
+                      global_batch=4, seed=args.seed)
     ds = SyntheticLM(dcfg)
 
     print("profiling expert-selection paths ...", flush=True)
@@ -44,20 +54,32 @@ def main(argv=None):
 
     server = MoEServer(cfg, params, prof,
                        ServerConfig(path_len=args.path_len,
-                                    schedule_policy=args.policy))
-    ft, acc, loads = [], [], []
-    for i in range(args.batches):
-        batch = ds.batch(1000 + i)
-        logits, stats = server.serve(batch["tokens"])
-        ft += [s.finetuned for s in stats]
-        acc += [s.est_accurate for s in stats]
-        loads += [s.device_load() if callable(getattr(s, 'device_load', None))
-                  else s.device_load for s in stats]
-        print(f"batch {i}: {len(stats)} MoE layers, "
-              f"finetuned {sum(s.finetuned for s in stats)}", flush=True)
-    loads = np.stack(loads)
-    print(f"policy={args.policy}  fine-tune rate {np.mean(ft):.1%}  "
-          f"estimation accuracy {np.mean(acc):.1%}")
+                                    schedule_policy=args.policy,
+                                    plan_cache=not args.no_plan_cache))
+    engine = ServingEngine(server,
+                           EngineConfig(max_batch_tokens=args.batch_tokens,
+                                        max_batch_requests=args.batch_requests))
+
+    rng = np.random.RandomState(1000 + args.seed)
+    t, trace = 0.0, []
+    for _ in range(args.requests):
+        t += rng.exponential(1.0 / args.rate)
+        trace.append((rng.randint(0, cfg.vocab_size, (args.seq,)), t))
+
+    print(f"serving {args.requests} requests (Poisson rate {args.rate}/s) "
+          f"...", flush=True)
+    results = simulate(engine, trace)
+
+    lat = np.array([r.latency for r in results])
+    stats = engine.layer_stats
+    loads = np.stack([s.device_load for s in stats])
+    print(f"policy={args.policy}  completed {len(results)} requests")
+    print(f"latency p50 {np.percentile(lat, 50)*1e3:.1f} ms  "
+          f"p95 {np.percentile(lat, 95)*1e3:.1f} ms")
+    print(f"plan reuse {engine.plan_reuse_rate:.1%}  "
+          f"fine-tune rate {engine.finetune_rate:.1%}  "
+          f"estimation accuracy "
+          f"{np.mean([s.est_accurate for s in stats]):.1%}")
     print(f"device load imbalance (max/mean): "
           f"{(loads.max(1) / np.maximum(loads.mean(1), 1e-9)).mean():.2f}x")
     return 0

@@ -1,3 +1,6 @@
-"""Runtime: fault-tolerant Trainer and the two-phase MoE Server."""
+"""Runtime: fault-tolerant Trainer, the two-phase MoE Server, and the
+continuous-batching ServingEngine front end."""
 from repro.runtime.trainer import Trainer, TrainerConfig
-from repro.runtime.server import MoEServer, ServerConfig
+from repro.runtime.server import MoEServer, ServeResult, ServerConfig
+from repro.runtime.engine import (EngineConfig, Request, RequestResult,
+                                  ServingEngine, simulate)

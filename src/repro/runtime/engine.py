@@ -1,0 +1,209 @@
+"""Continuous-batching front end for the two-phase MoE server (§5/§6.2).
+
+Requests enter a FIFO queue with arrival timestamps; each engine step forms
+a micro-batch under a token budget (and a request cap), pads it to a
+bucketed rectangle so jit caches stay small, and runs it through
+``MoEServer.serve_batch`` — the plan-honoring distributed dispatch with a
+cross-batch PlanCache, so phase-1 planning amortizes over traffic instead
+of running per layer per batch.  Gating capacity is sized from *valid*
+tokens (see ``MoEServer._valid_capacity``), so bucket padding never changes
+a real request's dispatch.  Each request's rolling path-ID state is kept
+(bounded) after completion: submitting a follow-up with ``prev_rid`` seeds
+the next step's popularity estimation from where the last step left off.
+
+Latency accounting supports both wall-clock serving (``submit`` stamps
+arrivals from the engine clock) and open-loop trace replay (``simulate``):
+virtual arrival times drive queueing delay while the measured wall time of
+each step drives service time.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass
+from typing import Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.runtime.server import LayerStats, MoEServer
+
+
+@dataclass
+class EngineConfig:
+    max_batch_tokens: int = 1024   # token budget per micro-batch
+    max_batch_requests: int = 16   # row cap per micro-batch
+    pad_to_pow2: bool = True       # bucket batch rows to powers of two
+    state_cache: int = 4096        # completed path states kept for follow-ups
+    stats_window: int = 4096       # LayerStats retained for metrics
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                       # [S] token ids
+    arrival: float                           # queue-entry timestamp
+    path_state: Optional[np.ndarray] = None  # [S] rolling path ids
+
+
+@dataclass
+class RequestResult:
+    rid: int
+    logits: np.ndarray                       # [V] last-token logits
+    arrival: float
+    completion: float
+    n_tokens: int
+
+    @property
+    def latency(self) -> float:
+        return self.completion - self.arrival
+
+
+class ServingEngine:
+    """Queue -> micro-batch -> plan-cached distributed dispatch."""
+
+    def __init__(self, server: MoEServer, ecfg: Optional[EngineConfig] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.server = server
+        self.ecfg = ecfg or EngineConfig()
+        self.clock = clock
+        self._queue: Deque[Request] = deque()
+        self._path_states: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self._next_rid = 0
+        self.layer_stats: Deque[LayerStats] = deque(
+            maxlen=self.ecfg.stats_window)
+        self._finetunes = 0
+        self._layers_served = 0
+
+    # --- queueing -----------------------------------------------------------
+    def submit(self, tokens, arrival: Optional[float] = None,
+               prev_rid: Optional[int] = None) -> int:
+        """Enqueue one request; returns its id.  ``prev_rid`` names an
+        earlier request of the same stream: the new request seeds its
+        rolling path-ID state from that request's final state."""
+        tokens = np.asarray(tokens).reshape(-1)
+        rid = self._next_rid
+        self._next_rid += 1
+        state = None if prev_rid is None else self.request_path_state(prev_rid)
+        req = Request(rid, tokens,
+                      self.clock() if arrival is None else arrival,
+                      path_state=state)
+        self._queue.append(req)
+        return rid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def request_path_state(self, rid: int) -> Optional[np.ndarray]:
+        for req in self._queue:             # still waiting: pre-step state
+            if req.rid == rid:
+                return req.path_state
+        return self._path_states.get(rid)
+
+    # --- micro-batch formation ---------------------------------------------
+    def _form_microbatch(self) -> List[Request]:
+        """FCFS under the token budget; always admits the queue head so an
+        over-budget single request still makes progress."""
+        ecfg = self.ecfg
+        batch: List[Request] = []
+        budget = ecfg.max_batch_tokens
+        while self._queue and len(batch) < ecfg.max_batch_requests:
+            nxt = self._queue[0]
+            cost = nxt.tokens.shape[0]
+            if batch and cost > budget:
+                break
+            batch.append(self._queue.popleft())
+            budget -= cost
+        return batch
+
+    @staticmethod
+    def _bucket_rows(n: int) -> int:
+        return 1 << (n - 1).bit_length()
+
+    def _remember_state(self, rid: int, state: np.ndarray) -> None:
+        self._path_states[rid] = state
+        while len(self._path_states) > self.ecfg.state_cache:
+            self._path_states.popitem(last=False)
+
+    # --- serving ------------------------------------------------------------
+    def step(self, now: Optional[float] = None, time_scale: float = 1.0
+             ) -> List[RequestResult]:
+        """Serve one micro-batch from the queue; returns completed
+        requests (empty when the queue is idle).  With ``now`` given,
+        completions are stamped ``now + wall_service * time_scale``
+        (virtual-clock replay); otherwise from the engine clock."""
+        batch = self._form_microbatch()
+        if not batch:
+            return []
+        b_real = len(batch)
+        b = self._bucket_rows(b_real) if self.ecfg.pad_to_pow2 else b_real
+        s = max(r.tokens.shape[0] for r in batch)
+        tokens = np.zeros((b, s), np.int64)
+        lengths = np.zeros((b,), np.int64)
+        path_init = np.zeros((b, s), np.int64)
+        for i, r in enumerate(batch):
+            n = r.tokens.shape[0]
+            tokens[i, :n] = r.tokens
+            lengths[i] = n
+            if r.path_state is not None:
+                m = min(n, r.path_state.shape[0])
+                path_init[i, :m] = r.path_state[:m]
+
+        t0 = time.perf_counter()
+        res = self.server.serve_batch(tokens, lengths=lengths,
+                                      path_init=path_init)
+        service = time.perf_counter() - t0
+        self.layer_stats.extend(res.stats)
+        self._finetunes += sum(s_.finetuned for s_ in res.stats)
+        self._layers_served += len(res.stats)
+        completion = self.clock() if now is None else now + service * time_scale
+
+        out: List[RequestResult] = []
+        for i, r in enumerate(batch):
+            n = int(lengths[i])
+            self._remember_state(r.rid, res.path_ids[i, :n].copy())
+            out.append(RequestResult(r.rid, res.logits[i], r.arrival,
+                                     completion, n))
+        return out
+
+    def run(self) -> List[RequestResult]:
+        """Drain the queue in wall-clock mode."""
+        results: List[RequestResult] = []
+        while self._queue:
+            results.extend(self.step())
+        return results
+
+    # --- metrics ------------------------------------------------------------
+    @property
+    def plan_reuse_rate(self) -> float:
+        cache = self.server.plan_cache
+        return cache.stats.reuse_rate if cache is not None else 0.0
+
+    @property
+    def finetune_rate(self) -> float:
+        return self._finetunes / self._layers_served \
+            if self._layers_served else 0.0
+
+
+def simulate(engine: ServingEngine, requests, time_scale: float = 1.0
+             ) -> List[RequestResult]:
+    """Open-loop trace replay: ``requests`` is an iterable of
+    (tokens, arrival_time) virtual-time pairs.  Queueing delay comes from
+    the virtual clock; service time is the measured wall time of each step
+    scaled by ``time_scale``.  Returns per-request results whose
+    ``latency`` mixes both — the standard open-loop p50/p95 methodology."""
+    trace = [(np.asarray(tok).reshape(-1), float(at)) for tok, at in requests]
+    trace.sort(key=lambda p: p[1])
+    vclock = 0.0
+    i = 0
+    results: List[RequestResult] = []
+    while i < len(trace) or engine.pending():
+        if not engine.pending():
+            vclock = max(vclock, trace[i][1])       # idle until next arrival
+        while i < len(trace) and trace[i][1] <= vclock:
+            engine.submit(trace[i][0], arrival=trace[i][1])
+            i += 1
+        done = engine.step(now=vclock, time_scale=time_scale)
+        if done:
+            vclock = done[0].completion             # one stamp per batch
+            results.extend(done)
+    return results

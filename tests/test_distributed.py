@@ -32,12 +32,13 @@ def test_moe_layer_lina_equals_baseline_on_mesh():
     out = run_snippet("""
         import jax, jax.numpy as jnp, numpy as np
         mesh = jax.make_mesh((2, 4), ("data", "model"))
+        from repro.launch.mesh import mesh_context
         from repro.core import init_moe_params, moe_layer
         from repro.configs.base import MoEConfig
         cfg = MoEConfig(n_experts=8, top_k=2, d_ff=32, n_microops=2)
         params = init_moe_params(jax.random.PRNGKey(0), 16, 32, 8)
         x = jax.random.normal(jax.random.PRNGKey(1), (8, 8, 16))
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             a = jax.jit(lambda x,p: moe_layer(mesh,x,p,cfg,lina=True))(x, params)
             b = jax.jit(lambda x,p: moe_layer(mesh,x,p,cfg,lina=False))(x, params)
         assert np.allclose(a.y, b.y, atol=1e-5), np.abs(a.y-b.y).max()
@@ -51,13 +52,14 @@ def test_serve_layer_honors_plan_and_matches_training():
     out = run_snippet("""
         import jax, jax.numpy as jnp, numpy as np
         mesh = jax.make_mesh((2, 4), ("data", "model"))
+        from repro.launch.mesh import mesh_context
         from repro.core import init_moe_params, moe_layer, plan_placement, PlanArrays
         from repro.core.serving import serve_moe_layer
         from repro.configs.base import MoEConfig
         cfg = MoEConfig(n_experts=8, top_k=1, d_ff=32, capacity_factor=2.0)
         params = init_moe_params(jax.random.PRNGKey(0), 16, 32, 8)
         x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             ref = jax.jit(lambda x,p: moe_layer(mesh, x.reshape(8,8,16), p, cfg,
                           lina=False, top_k=1))(x, params).y.reshape(64,16)
         for seed in range(3):
@@ -65,7 +67,7 @@ def test_serve_layer_honors_plan_and_matches_training():
             plan = plan_placement(pop, 4, max_pack=4)
             assert (plan.n_replicas >= 1).all()
             pa = PlanArrays.from_plan(plan)
-            with jax.set_mesh(mesh):
+            with mesh_context(mesh):
                 y, _, _ = jax.jit(lambda x,p,pl: serve_moe_layer(
                     mesh,x,p,cfg,pl,top_k=1))(x, params, pa)
             assert np.allclose(y, ref, atol=1e-4), np.abs(y-ref).max()
@@ -80,6 +82,7 @@ def test_prioritized_chunked_reduce_equals_psum():
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
         mesh = jax.make_mesh((8,), ("data",))
+        from repro.launch.mesh import mesh_context
         from repro.core.microop import prioritized_chunked_reduce
         grads = {"a": jnp.arange(40, dtype=jnp.float32).reshape(8, 5),
                  "b": jnp.ones((8, 3)) * 2.0}
@@ -90,7 +93,7 @@ def test_prioritized_chunked_reduce_equals_psum():
             plain = jax.tree.map(lambda x: jax.lax.pmean(x, "data"), g)
             return red, plain
 
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             red, plain = jax.jit(shard_map(body, mesh=mesh,
                 in_specs=({"a": P("data", None), "b": P("data", None)},),
                 out_specs=({"a": P("data", None), "b": P("data", None)},)*2,
@@ -130,6 +133,7 @@ def test_chunked_a2a_equivalence():
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
         mesh = jax.make_mesh((8,), ("model",))
+        from repro.launch.mesh import mesh_context
         from repro.core.microop import (all_to_all_ec, all_to_all_ec_inverse,
                                         chunked_all_to_all)
         buf = jax.random.normal(jax.random.PRNGKey(0), (8*8, 16, 4))
@@ -140,7 +144,7 @@ def test_chunked_a2a_equivalence():
             back = all_to_all_ec_inverse(whole, "model", 8)
             return whole, parts, back
 
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             whole, parts, back = jax.jit(shard_map(body, mesh=mesh,
                 in_specs=(P("model", None, None),),
                 out_specs=(P("model", None, None),)*3,

@@ -1,6 +1,6 @@
 """Placement planner invariants (Eq. 1 + FFD + two-phase), with hypothesis."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core.placement import (identity_plan, needs_finetune,
                                   plan_placement, two_phase_plan)

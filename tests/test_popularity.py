@@ -1,7 +1,7 @@
 """Popularity estimation (sample paths, Ψ tables): pattern recovery and
 accuracy metrics — the mechanism behind paper Fig. 9/19 and Table 5."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core.popularity import (PathProfile, estimation_accuracy,
                                    exact_buckets, rolling_path_id)

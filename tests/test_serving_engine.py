@@ -1,0 +1,239 @@
+"""Serving engine: plan cache (§5.2 drift invalidation), slot capacity under
+replication, continuous-batching queue/micro-batch behavior, and numerics of
+the distributed dispatch path the server now routes through."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import MoEConfig
+from repro.core import init_moe_params, moe_layer
+from repro.core.placement import (PlanCache, needs_finetune, plan_placement,
+                                  PlacementPlan)
+from repro.core.popularity import (PathProfile, estimation_accuracy,
+                                   top2k_sets_match)
+from repro.core.serving import PlanArrays, serve_moe_layer, slot_capacity
+from repro.models import lm as lm_mod
+from repro.runtime.engine import EngineConfig, ServingEngine, simulate
+from repro.runtime.server import MoEServer, ServerConfig
+
+
+# --- top-2k check: one implementation, pinned semantics ---------------------
+
+def test_top2k_check_is_single_implementation():
+    est = np.array([.4, .3, .1, .05, .05, .04, .03, .03])
+    same = est + 1e-3
+    flipped = est[::-1].copy()
+    for a, b in [(est, same), (est, flipped), (same, flipped)]:
+        for k in (1, 2):
+            assert estimation_accuracy(a, b, k) == top2k_sets_match(a, b, k)
+            assert needs_finetune(a, b, k) == (not top2k_sets_match(a, b, k))
+    # set semantics: order within the top-2k does not matter
+    a = np.array([.5, .3, .1, .1])
+    b = np.array([.3, .5, .1, .1])           # top-2 swapped, same set
+    assert top2k_sets_match(a, b, 1)
+    # 2k clips at E
+    assert top2k_sets_match(a, b, 8)
+
+
+# --- plan cache -------------------------------------------------------------
+
+def test_plan_cache_reuse_and_invalidation():
+    e = 8
+    pop = np.array([.4, .2, .1, .1, .05, .05, .05, .05])
+    cache = PlanCache(top_k=1)
+    assert cache.lookup(0, pop) is None              # cold miss
+    plan = plan_placement(pop, e, max_pack=4)
+    cache.store(0, plan)
+    # same top-2k set -> hit, even with perturbed magnitudes
+    assert cache.lookup(0, pop * 1.1) is plan
+    # drift: a different expert enters the top-2k -> invalidate
+    drifted = pop.copy()
+    drifted[7] = 0.9
+    assert cache.lookup(0, drifted) is None
+    assert cache.stats.hits == 1
+    assert cache.stats.misses == 2
+    assert cache.stats.invalidations == 1
+    # entry was evicted: next lookup with the original pop misses again
+    assert cache.lookup(0, pop) is None
+    np.testing.assert_allclose(cache.stats.reuse_rate, 1 / 4)
+
+
+def test_plan_cache_is_per_layer():
+    pop = np.ones(4) / 4
+    cache = PlanCache(top_k=1)
+    cache.store(0, plan_placement(pop, 4))
+    assert cache.lookup(1, pop) is None
+    assert cache.lookup(0, pop) is not None
+
+
+# --- slot capacity under replication ----------------------------------------
+
+def test_slot_capacity_shrinks_with_replication():
+    assert slot_capacity(64, 1) == 64
+    assert slot_capacity(64, 2) == 32        # replicated -> smaller buffers
+    assert slot_capacity(64, 3) == 22        # ceil division
+    assert slot_capacity(16, 4) == 8         # floored at 8
+    assert slot_capacity(24, 0) == 24        # degenerate guard
+
+
+def test_serve_layer_replicated_buffers_match_unreplicated():
+    """End-to-end regression: a fully-replicated plan served with shrunken
+    per-slot buffers (min_replicas=2) matches the min_replicas=1 numerics
+    and the reference training layer."""
+    cfg = MoEConfig(n_experts=4, top_k=1, d_ff=32, capacity_factor=4.0)
+    params = init_moe_params(jax.random.PRNGKey(0), 16, 32, 4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    # uniform popularity over 4 experts on 8 devices -> every expert gets
+    # 2 replicas (Eq. 1: n_e = 8 * 0.25 = 2)
+    plan = plan_placement(np.ones(4) / 4, 8, max_pack=4)
+    assert int(plan.n_replicas.min()) == 2
+    pa = PlanArrays.from_plan(plan)
+    y1, _, _ = serve_moe_layer(None, x, params, cfg, pa, top_k=1,
+                               min_replicas=1)
+    y2, _, _ = serve_moe_layer(None, x, params, cfg, pa, top_k=1,
+                               min_replicas=2)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    ref = moe_layer(None, x.reshape(4, 16, 16), params, cfg, lina=False,
+                    top_k=1).y.reshape(64, 16)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(ref), atol=1e-4)
+
+
+# --- server: plan cache wired into the serve loop ---------------------------
+
+def _smoke_server(policy="lina", plan_cache=True, capacity_factor=None):
+    cfg = get_config("gpt2-moe").smoke()
+    if capacity_factor is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         capacity_factor=capacity_factor))
+    params = lm_mod.init_params(cfg, jax.random.PRNGKey(0))
+    prof = PathProfile(n_layers=cfg.n_moe_layers,
+                       n_experts=cfg.moe.n_experts, path_len=2)
+    scfg = ServerConfig(path_len=2, schedule_policy=policy,
+                        plan_cache=plan_cache)
+    return cfg, MoEServer(cfg, params, prof, scfg)
+
+
+def test_server_plan_cache_amortizes_across_batches():
+    cfg, server = _smoke_server()
+    toks = np.random.RandomState(0).randint(0, cfg.vocab_size, (2, 16))
+    _, stats1 = server.serve(toks)
+    assert not any(s.plan_reused for s in stats1)    # cold caches
+    _, stats2 = server.serve(toks)                   # identical traffic
+    assert all(s.plan_reused for s in stats2)        # full reuse
+    st = server.plan_cache.stats
+    assert st.hits == len(stats2) and st.misses == len(stats1)
+
+
+def test_server_without_plan_cache_never_reuses():
+    cfg, server = _smoke_server(plan_cache=False)
+    toks = np.random.RandomState(0).randint(0, cfg.vocab_size, (2, 16))
+    for _ in range(2):
+        _, stats = server.serve(toks)
+        assert not any(s.plan_reused for s in stats)
+    assert server.plan_cache is None
+
+
+def test_server_config_default_not_shared():
+    cfg = get_config("gpt2-moe").smoke()
+    params = lm_mod.init_params(cfg, jax.random.PRNGKey(0))
+    prof = PathProfile(n_layers=cfg.n_moe_layers,
+                       n_experts=cfg.moe.n_experts, path_len=2)
+    a = MoEServer(cfg, params, prof)
+    b = MoEServer(cfg, params, prof)
+    assert a.scfg is not b.scfg                      # no shared default
+
+
+# --- continuous-batching engine ---------------------------------------------
+
+def test_engine_microbatch_formation_token_budget():
+    cfg, server = _smoke_server()
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=32,
+                                             max_batch_requests=8))
+    rng = np.random.RandomState(0)
+    for _ in range(5):
+        eng.submit(rng.randint(0, cfg.vocab_size, (16,)), arrival=0.0)
+    batch = eng._form_microbatch()
+    assert len(batch) == 2                           # 2 * 16 fills the budget
+    assert [r.rid for r in batch] == [0, 1]          # FCFS
+    assert eng.pending() == 3
+    # an over-budget single request still progresses
+    eng2 = ServingEngine(server, EngineConfig(max_batch_tokens=8))
+    eng2.submit(rng.randint(0, cfg.vocab_size, (16,)), arrival=0.0)
+    assert len(eng2._form_microbatch()) == 1
+
+
+def test_engine_serves_requests_and_matches_server():
+    cfg, server = _smoke_server(capacity_factor=16.0)
+    toks = np.random.RandomState(1).randint(0, cfg.vocab_size, (1, 16))
+    ref_logits, _ = server.serve(toks)
+
+    cfg2, server2 = _smoke_server(capacity_factor=16.0)
+    eng = ServingEngine(server2, EngineConfig(max_batch_tokens=16))
+    eng.submit(toks[0], arrival=0.0)
+    results = eng.run()
+    assert len(results) == 1
+    np.testing.assert_allclose(results[0].logits, ref_logits[0],
+                               atol=1e-4, rtol=1e-4)
+    assert results[0].n_tokens == 16
+    assert np.isfinite(results[0].logits).all()
+
+
+def test_engine_ragged_batch_and_path_state():
+    cfg, server = _smoke_server()
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=64))
+    rng = np.random.RandomState(2)
+    r1 = eng.submit(rng.randint(0, cfg.vocab_size, (16,)), arrival=0.0)
+    r2 = eng.submit(rng.randint(0, cfg.vocab_size, (9,)), arrival=0.0)
+    results = eng.step(now=0.0)
+    assert sorted(r.rid for r in results) == [r1, r2]
+    by_rid = {r.rid: r for r in results}
+    assert by_rid[r2].n_tokens == 9
+    # per-request rolling path state persisted, sized to the request
+    ps1 = eng.request_path_state(r1)
+    ps2 = eng.request_path_state(r2)
+    assert ps1.shape == (16,) and ps2.shape == (9,)
+    assert (ps1 < server.profile.n_buckets).all()
+    # a follow-up request carries its stream's rolling path state
+    r3 = eng.submit(np.zeros(9, np.int64), arrival=1.0, prev_rid=r2)
+    np.testing.assert_array_equal(eng.request_path_state(r3), ps2)
+    results2 = eng.step(now=1.0)
+    assert len(results2) == 1 and np.isfinite(results2[0].logits).all()
+    # ... and its own final state differs from the seed after serving
+    assert eng.request_path_state(r3).shape == (9,)
+
+
+def test_engine_padding_rows_do_not_change_logits():
+    """Bucketing 5 requests to 8 rows (3 all-pad rows) must not perturb the
+    real requests' logits at the default capacity factor: capacity is sized
+    from valid tokens and pad rows sort after real rows in slot order."""
+    cfg, server = _smoke_server()
+    rng = np.random.RandomState(5)
+    reqs = [rng.randint(0, cfg.vocab_size, (12,)) for _ in range(5)]
+    _, server_direct = _smoke_server()
+    direct = server_direct.serve_batch(np.stack(reqs))
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=60,
+                                             max_batch_requests=5))
+    rids = [eng.submit(r, arrival=0.0) for r in reqs]
+    results = {r.rid: r for r in eng.step(now=0.0)}
+    for i, rid in enumerate(rids):
+        np.testing.assert_allclose(results[rid].logits, direct.logits[i],
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_engine_simulate_open_loop_latency():
+    cfg, server = _smoke_server()
+    rng = np.random.RandomState(3)
+    toks = rng.randint(0, cfg.vocab_size, (16,))
+    # steady traffic: identical requests -> stable popularity -> plan reuse
+    trace = [(toks, 0.01 * i) for i in range(6)]
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=32))
+    results = simulate(eng, trace)
+    assert len(results) == 6
+    assert all(r.latency >= 0 for r in results)
+    assert all(r.completion >= r.arrival for r in results)
+    # steady traffic + cached plans => some reuse after the first batch
+    assert eng.plan_reuse_rate > 0.0
