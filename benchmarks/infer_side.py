@@ -26,7 +26,8 @@ MODEL_TOKENS = 32768
 from repro.core.popularity import PathProfile
 from repro.data import DataConfig, SyntheticLM
 from repro.models import lm as lm_mod
-from repro.runtime.engine import EngineConfig, ServingEngine, simulate
+from repro.runtime.engine import (EngineConfig, ServingEngine, simulate,
+                                  summarize_results)
 from repro.runtime.server import MoEServer, ServerConfig, profile_from_training
 
 MODELS = {"transformer-xl": TRANSFORMER_XL, "bert-large": BERT_LARGE}
@@ -158,11 +159,14 @@ def poisson_zipf_trace(cfg, n_requests: int, seq: int, rate_hz: float,
 
 
 def traffic_skewed_bursty(n_requests=24, seq=48, rate_hz=20.0,
-                          profile_batches=4):
+                          profile_batches=4, max_new_tokens=8):
     """Serving-engine scenario: Zipf-skewed expert popularity + Poisson
-    (bursty) arrivals through the continuous-batching engine.  Reports
-    p50/p95 request latency (virtual-clock: queueing from arrivals, service
-    from measured wall time) and the plan-cache reuse rate for `lina` vs
+    (bursty) arrivals through the continuous-batching engine, each request
+    *generating* ``max_new_tokens`` tokens through the incremental
+    KV-cache decode path (the paper's §5 latency-bound regime).  Reports
+    request latency, TTFT and time-per-output-token p50/p95
+    (virtual-clock: queueing from arrivals, service from measured wall
+    time), decode throughput, and the plan-cache reuse rate for `lina` vs
     `uniform` scheduling."""
     cfg, params = _skewed_smoke(TRANSFORMER_XL, 16)
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq, global_batch=4,
@@ -179,14 +183,19 @@ def traffic_skewed_bursty(n_requests=24, seq=48, rate_hz=20.0,
                                                     max_batch_requests=8))
         trace = poisson_zipf_trace(cfg, n_requests, seq, rate_hz, seed=7)
         t0 = time.perf_counter()
-        results = simulate(engine, trace)
+        results = simulate(engine, trace, max_new_tokens=max_new_tokens)
         wall = time.perf_counter() - t0
-        lat = np.array([r.latency for r in results])
+        m = summarize_results(results)
         loads = [s.device_load.max() for s in engine.layer_stats]
         rows.append((
             f"traffic/txl-16e-{policy}", wall / max(len(results), 1) * 1e6,
-            f"p50_ms={np.percentile(lat, 50)*1e3:.1f},"
-            f"p95_ms={np.percentile(lat, 95)*1e3:.1f},"
+            f"p50_ms={m['latency_p50']*1e3:.1f},"
+            f"p95_ms={m['latency_p95']*1e3:.1f},"
+            f"ttft_p50_ms={m['ttft_p50']*1e3:.1f},"
+            f"ttft_p95_ms={m['ttft_p95']*1e3:.1f},"
+            f"tpot_p50_ms={m['tpot_p50']*1e3:.1f},"
+            f"tpot_p95_ms={m['tpot_p95']*1e3:.1f},"
+            f"gen_tok_s={m['gen_tok_s']:.1f},"
             f"plan_reuse={engine.plan_reuse_rate:.2f},"
             f"finetune_rate={engine.finetune_rate:.2f},"
             f"max_load={np.mean(loads):.3f}"))

@@ -14,6 +14,18 @@ import sys
 import time
 
 
+# per-table kwargs for --smoke: a CI-sized run of the same code path.
+# Tables without an entry take no size kwargs (the train-side tables are
+# already smoke-scale); --smoke prints a note when it runs one unreduced.
+SMOKE_KWARGS = {
+    "fig16": dict(batches=2, seq=32),
+    "table5": dict(batches=2, seq=32),
+    "fig19": dict(batches=2, seq=32),
+    "traffic": dict(n_requests=6, seq=16, rate_hz=50.0, profile_batches=2,
+                    max_new_tokens=4),
+}
+
+
 def all_benchmarks():
     from benchmarks import train_side, infer_side
     return [
@@ -32,21 +44,37 @@ def all_benchmarks():
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (reduced request counts / seq lens)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit nonzero if any benchmark errors (CI gating)")
     args = ap.parse_args(argv)
 
+    errors = 0
+    ran = 0
     print("name,us_per_call,derived")
     for name, fn in all_benchmarks():
         if args.only and args.only != name:
             continue
+        ran += 1
+        kwargs = SMOKE_KWARGS.get(name, {}) if args.smoke else {}
+        if args.smoke and name not in SMOKE_KWARGS:
+            print(f"# {name}: no smoke config, running at full size",
+                  file=sys.stderr)
         t0 = time.time()
         try:
-            rows = fn()
+            rows = fn(**kwargs)
         except Exception as e:  # noqa: BLE001 — a failing table must not
             print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+            errors += 1
             continue
         for rname, us, derived in rows:
             print(f'{rname},{us:.1f},"{derived}"', flush=True)
         print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if args.only and not ran:
+        sys.exit(f"no benchmark named {args.only!r}")
+    if args.strict and errors:
+        sys.exit(f"{errors} benchmark(s) errored")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,10 @@
 """Serving scenario: profile expert-selection paths on 'training' data, then
-serve a bursty request trace through the continuous-batching engine with
-Lina's two-phase popularity scheduling, and compare against the uniform
-(DeepSpeed-style) placement on latency, load balance, and plan reuse.
+serve a bursty *generation* trace through the continuous-batching engine —
+each request prefills once and then decodes incrementally through its KV
+cache, with per-layer plan-scheduled MoE dispatch — and compare Lina's
+two-phase popularity scheduling against the uniform (DeepSpeed-style)
+placement on latency, TTFT, per-output-token time, load balance, and plan
+reuse.
 
     PYTHONPATH=src python examples/serve_popularity.py
 """
@@ -14,7 +17,8 @@ import numpy as np
 from repro.configs import get_config, with_experts, TRANSFORMER_XL
 from repro.data import DataConfig, SyntheticLM
 from repro.models import lm as lm_mod
-from repro.runtime.engine import EngineConfig, ServingEngine, simulate
+from repro.runtime.engine import (EngineConfig, ServingEngine, simulate,
+                                  summarize_results)
 from repro.runtime.server import MoEServer, ServerConfig, profile_from_training
 
 
@@ -50,13 +54,15 @@ def main():
                         ServerConfig(path_len=3, schedule_policy=policy))
         eng = ServingEngine(srv, EngineConfig(max_batch_tokens=256,
                                               max_batch_requests=4))
-        results = simulate(eng, trace)
-        lat = np.array([r.latency for r in results])
+        results = simulate(eng, trace, max_new_tokens=8)
+        m = summarize_results(results)
         loads = [s.device_load.max() for s in eng.layer_stats]
         fts = [s.finetuned for s in eng.layer_stats]
         accs = [s.est_accurate for s in eng.layer_stats]
-        print(f"{policy:8s}: p50 {np.percentile(lat, 50)*1e3:6.1f} ms  "
-              f"p95 {np.percentile(lat, 95)*1e3:6.1f} ms  "
+        print(f"{policy:8s}: p50 {m['latency_p50']*1e3:6.1f} ms  "
+              f"p95 {m['latency_p95']*1e3:6.1f} ms  "
+              f"TTFT p50 {m['ttft_p50']*1e3:6.1f} ms  "
+              f"TPOT p50 {m['tpot_p50']*1e3:6.1f} ms  "
               f"max-device-load {np.mean(loads):.3f} (ideal {1/16:.3f})  "
               f"plan-reuse {eng.plan_reuse_rate:.0%}  "
               f"fine-tune {np.mean(fts):.0%}  "

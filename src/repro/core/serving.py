@@ -26,15 +26,47 @@ from repro.core.placement import PlacementPlan
 
 
 class PlanArrays(NamedTuple):
-    """Device-resident form of a PlacementPlan (static shapes)."""
-    slot_expert: jax.Array   # [n_dev, S] int32
-    replica_of: jax.Array    # [E, R] int32 flat slot ids
-    n_replicas: jax.Array    # [E] int32
+    """Device-resident form of a PlacementPlan (static shapes).
+
+    A *stacked* PlanArrays carries one plan per MoE layer with a leading
+    layer dim on every leaf (``slot_expert.ndim == 3``); ``decode_step``
+    scans over it so each layer group dispatches under its own plan.
+    """
+    slot_expert: jax.Array   # [n_dev, S] int32       (stacked: [L, n_dev, S])
+    replica_of: jax.Array    # [E, R] int32 flat slot ids  (stacked: [L, E, R])
+    n_replicas: jax.Array    # [E] int32                   (stacked: [L, E])
 
     @classmethod
     def from_plan(cls, plan: PlacementPlan) -> "PlanArrays":
         return cls(jnp.asarray(plan.slot_expert), jnp.asarray(plan.replica_of),
                    jnp.asarray(plan.n_replicas))
+
+    @property
+    def stacked(self) -> bool:
+        return self.slot_expert.ndim == 3
+
+
+def stack_plan_arrays(plans) -> PlanArrays:
+    """Stack per-layer plans (PlacementPlan or PlanArrays) into one stacked
+    PlanArrays with a leading layer dim.  All plans must agree on device
+    count and sub-slot count; replica tables are right-padded with -1 to the
+    widest plan so the stack is rectangular."""
+    arrs = [p if isinstance(p, PlanArrays) else PlanArrays.from_plan(p)
+            for p in plans]
+    assert arrs, "stack_plan_arrays needs at least one plan"
+    shapes = {a.slot_expert.shape for a in arrs}
+    assert len(shapes) == 1, f"plans disagree on device layout: {shapes}"
+    r = max(a.replica_of.shape[1] for a in arrs)
+
+    def pad(a):
+        w = r - a.shape[1]
+        return a if not w else jnp.pad(a, ((0, 0), (0, w)),
+                                       constant_values=-1)
+
+    return PlanArrays(
+        jnp.stack([a.slot_expert for a in arrs]),
+        jnp.stack([pad(a.replica_of) for a in arrs]),
+        jnp.stack([a.n_replicas for a in arrs]))
 
 
 def route_to_slots(expert_idx: jax.Array, position: jax.Array,

@@ -1,10 +1,13 @@
 """Serving driver: profile expert-selection paths, then serve a request
 trace through the continuous-batching engine with Lina's two-phase
-popularity scheduling (queue -> micro-batch -> plan cache -> distributed
-dispatch).
+popularity scheduling (queue -> prefill/decode micro-batches -> plan cache
+-> distributed dispatch).  Each request generates ``--max-new-tokens``
+tokens through the incremental KV-cache decode path; pass 0 for the
+score-only (single-prefill) mode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gpt2-moe-smoke \
-        --requests 24 --seq 64 --rate 20 [--policy uniform|lina]
+        --requests 24 --seq 64 --rate 20 --max-new-tokens 8 \
+        [--policy uniform|lina]
 """
 from __future__ import annotations
 
@@ -15,7 +18,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticLM
 from repro.models import lm as lm_mod
-from repro.runtime.engine import EngineConfig, ServingEngine, simulate
+from repro.runtime.engine import (EngineConfig, ServingEngine, simulate,
+                                  summarize_results)
 from repro.runtime.server import MoEServer, ServerConfig, profile_from_training
 
 import jax
@@ -33,6 +37,9 @@ def main(argv=None):
                     help="engine micro-batch token budget")
     ap.add_argument("--batch-requests", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--max-new-tokens", type=int, default=8,
+                    help="tokens to generate per request via incremental "
+                         "decode (0 = score-only prefill)")
     ap.add_argument("--path-len", type=int, default=3)
     ap.add_argument("--policy", default="lina", choices=["lina", "uniform"])
     ap.add_argument("--no-plan-cache", action="store_true",
@@ -66,16 +73,22 @@ def main(argv=None):
         t += rng.exponential(1.0 / args.rate)
         trace.append((rng.randint(0, cfg.vocab_size, (args.seq,)), t))
 
-    print(f"serving {args.requests} requests (Poisson rate {args.rate}/s) "
-          f"...", flush=True)
-    results = simulate(engine, trace)
+    print(f"serving {args.requests} requests (Poisson rate {args.rate}/s, "
+          f"{args.max_new_tokens} new tokens each) ...", flush=True)
+    results = simulate(engine, trace, max_new_tokens=args.max_new_tokens)
 
-    lat = np.array([r.latency for r in results])
+    m = summarize_results(results)
     stats = engine.layer_stats
     loads = np.stack([s.device_load for s in stats])
-    print(f"policy={args.policy}  completed {len(results)} requests")
-    print(f"latency p50 {np.percentile(lat, 50)*1e3:.1f} ms  "
-          f"p95 {np.percentile(lat, 95)*1e3:.1f} ms")
+    print(f"policy={args.policy}  completed {m['n']} requests")
+    print(f"latency p50 {m['latency_p50']*1e3:.1f} ms  "
+          f"p95 {m['latency_p95']*1e3:.1f} ms")
+    if args.max_new_tokens:
+        print(f"TTFT p50 {m['ttft_p50']*1e3:.1f} ms  "
+              f"p95 {m['ttft_p95']*1e3:.1f} ms")
+        print(f"TPOT p50 {m['tpot_p50']*1e3:.1f} ms  "
+              f"p95 {m['tpot_p95']*1e3:.1f} ms  "
+              f"({m['gen_tok_s']:.1f} gen tok/s)")
     print(f"plan reuse {engine.plan_reuse_rate:.1%}  "
           f"fine-tune rate {engine.finetune_rate:.1%}  "
           f"estimation accuracy "

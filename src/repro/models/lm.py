@@ -475,7 +475,17 @@ def init_cache(cfg, batch, seq_len, dtype=jnp.bfloat16) -> LMCache:
 def decode_step(mesh, cfg, params: LMParams, cache: LMCache, token,
                 *, lina=False, serve_plan=None, serve_top_k=None,
                 fsdp=False) -> tuple:
-    """One decode step.  token: [B] int32.  Returns (logits [B,V], cache)."""
+    """One decode step.  token: [B] int32.
+
+    Returns (logits [B,V], cache, expert_choices) where expert_choices is
+    the per-MoE-layer top-1 expert index of each row ([n_moe_layers, B]
+    int32; None for non-MoE stacks) — callers roll path-ID state with it so
+    popularity estimation keeps working during generation.
+
+    ``serve_plan`` may be a single ``PlanArrays`` shared by every MoE layer
+    or a *stacked* PlanArrays (leading layer dim, see
+    ``core.serving.stack_plan_arrays``) giving each layer its own placement.
+    """
     params = cast_for_compute(cfg, params)
     dtype = jnp.dtype(cfg.dtype)
     x = params.embed[token][:, None].astype(dtype)       # [B,1,d]
@@ -516,6 +526,7 @@ def decode_step(mesh, cfg, params: LMParams, cache: LMCache, token,
             body, (x, cache.kv, jnp.zeros((), jnp.int32)),
             (hp.mamba, hp.ln_m, cache.mamba, taps))
         new_cache = LMCache(kvt, ms_new, None, pos + 1)
+        experts = None
     elif isinstance(params.stack, RWKVStack):
         st = params.stack
 
@@ -542,13 +553,20 @@ def decode_step(mesh, cfg, params: LMParams, cache: LMCache, token,
         x, rs_new = jax.lax.scan(body, x, (st.blocks, st.ln1, st.ln2,
                                            cache.rwkv))
         new_cache = LMCache(None, None, rs_new, pos + 1)
+        experts = None
     else:
         gp_stack = params.stack
         every = cfg.moe.every if cfg.moe.enabled else 1
+        stacked_plan = serve_plan is not None and serve_plan.stacked
 
         def body(x, inp):
-            gp, kv_g = inp
+            if stacked_plan:
+                gp, kv_g, plan = inp
+            else:
+                gp, kv_g = inp
+                plan = serve_plan
             new_kvs = []
+            top1 = jnp.zeros((b,), jnp.int32)
             for j in range(every):
                 a_p = _tree_idx(gp.attn, j)
                 kv_j = jax.tree.map(lambda a: a[j], kv_g)
@@ -565,27 +583,32 @@ def decode_step(mesh, cfg, params: LMParams, cache: LMCache, token,
                     x = x + _ffn_apply(ffn_p, h, cfg.ffn_type, mesh,
                                    cfg.tensor_parallel)
                 else:
-                    if serve_plan is not None:
+                    if plan is not None:
                         h2 = h.reshape(b, d)
-                        y2, _, _ = serve_moe_layer(
-                            mesh, h2, gp.moe, cfg.moe, serve_plan,
+                        y2, eidx, _ = serve_moe_layer(
+                            mesh, h2, gp.moe, cfg.moe, plan,
                             ffn_type=cfg.ffn_type, top_k=serve_top_k)
                         moe_y = y2.reshape(b, 1, d)
                     else:
-                        moe_y = moe_layer(mesh, h, gp.moe, cfg.moe,
-                                          ffn_type=cfg.ffn_type, lina=lina,
-                                          fsdp=fsdp,
-                                          top_k=serve_top_k).y
+                        out = moe_layer(mesh, h, gp.moe, cfg.moe,
+                                        ffn_type=cfg.ffn_type, lina=lina,
+                                        fsdp=fsdp,
+                                        top_k=serve_top_k)
+                        moe_y, eidx = out.y, out.expert_idx
+                    top1 = eidx[:, 0].astype(jnp.int32)
                     if gp.shared is not None:
                         moe_y = moe_y + _ffn_apply(gp.shared, h, cfg.ffn_type,
                                                    mesh)
                     x = x + moe_y
             kv_stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_kvs)
-            return x, kv_stacked
+            return x, (kv_stacked, top1)
 
-        x, kv_new = jax.lax.scan(body, x, (gp_stack, cache.kv))
+        xs = (gp_stack, cache.kv, serve_plan) if stacked_plan \
+            else (gp_stack, cache.kv)
+        x, (kv_new, top1s) = jax.lax.scan(body, x, xs)
         new_cache = LMCache(kv_new, None, None, pos + 1)
+        experts = top1s if cfg.moe.enabled else None
 
     x = rms_norm(x, params.final_norm, cfg.norm_eps)
     logits = x[:, 0] @ unembed_weight(params)
-    return logits, new_cache
+    return logits, new_cache, experts

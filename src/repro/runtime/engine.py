@@ -1,37 +1,55 @@
 """Continuous-batching front end for the two-phase MoE server (§5/§6.2).
 
-Requests enter a FIFO queue with arrival timestamps; each engine step forms
-a micro-batch under a token budget (and a request cap), pads it to a
-bucketed rectangle so jit caches stay small, and runs it through
-``MoEServer.serve_batch`` — the plan-honoring distributed dispatch with a
-cross-batch PlanCache, so phase-1 planning amortizes over traffic instead
-of running per layer per batch.  Gating capacity is sized from *valid*
-tokens (see ``MoEServer._valid_capacity``), so bucket padding never changes
-a real request's dispatch.  Each request's rolling path-ID state is kept
-(bounded) after completion: submitting a follow-up with ``prev_rid`` seeds
-the next step's popularity estimation from where the last step left off.
+Requests enter a FIFO queue with arrival timestamps and a
+``max_new_tokens`` generation budget, then move through a lifecycle:
+
+    queued -> prefill -> decoding -> done
+
+Each engine step forms a micro-batch under a shared token budget that MIXES
+the two phases: in-flight decodes cost one token each and are admitted
+first (they are the latency-bound regime Lina's §5 targets), and the
+remaining budget admits newly queued prefills FCFS.  Prefills run through
+``MoEServer.prefill_batch`` — the plan-honoring distributed dispatch with a
+cross-batch PlanCache — which returns last-token logits plus a KV cache;
+the engine then parks each generating request in a *decode slot* that
+persists its per-request KV cache and rolling path-ID state across steps,
+and subsequent steps drive ``MoEServer.decode_batch`` one token at a time.
+A request with ``max_new_tokens == 0`` completes at prefill with its
+last-prompt logits (the PR-1 scoring behavior).
+
+Gating capacity is sized from *valid* tokens (see
+``MoEServer._valid_capacity``), so bucket padding never changes a real
+request's dispatch.  Each request's rolling path-ID state is kept (bounded)
+after completion: submitting a follow-up with ``prev_rid`` seeds the next
+request's popularity estimation from where the last one left off.  States
+of still-active (mid-decode) requests are pinned and never evicted.
 
 Latency accounting supports both wall-clock serving (``submit`` stamps
 arrivals from the engine clock) and open-loop trace replay (``simulate``):
 virtual arrival times drive queueing delay while the measured wall time of
-each step drives service time.
+each step drives service time.  Per-request TTFT (time of the first
+generated token) and completion times support time-per-output-token
+reporting.
 """
 from __future__ import annotations
 
 import time
 from collections import OrderedDict, deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
+from repro.models.attention import KVCache
+from repro.models.lm import LMCache
 from repro.runtime.server import LayerStats, MoEServer
 
 
 @dataclass
 class EngineConfig:
     max_batch_tokens: int = 1024   # token budget per micro-batch
-    max_batch_requests: int = 16   # row cap per micro-batch
+    max_batch_requests: int = 16   # row cap per micro-batch (each phase)
     pad_to_pow2: bool = True       # bucket batch rows to powers of two
     state_cache: int = 4096        # completed path states kept for follow-ups
     stats_window: int = 4096       # LayerStats retained for metrics
@@ -43,23 +61,73 @@ class Request:
     tokens: np.ndarray                       # [S] token ids
     arrival: float                           # queue-entry timestamp
     path_state: Optional[np.ndarray] = None  # [S] rolling path ids
+    max_new_tokens: int = 0                  # 0 => score-only (no decode)
+
+
+@dataclass
+class DecodeSlot:
+    """Per-request state persisted across decode steps: the KV cache slice
+    owned by this request plus its rolling path-ID state.  While the decode
+    batch's membership is stable the engine keeps the whole *batched* cache
+    resident and slots only hold a (batch, row) reference; the per-request
+    slice is materialized lazily when the batch has to be rebuilt."""
+    rid: int
+    arrival: float
+    prompt_len: int
+    max_new_tokens: int
+    cap: int                                 # cache capacity (time slots)
+    kv_k: object                             # [G, every, S_cap, KV, hd]|None
+    kv_v: object
+    pos: int                                 # next cache slot / abs position
+    path_scalar: int                         # most recent token's path hash
+    path_history: List[int]                  # per-token rolling states
+    gen_tokens: List[int]                    # generated token ids
+    ttft: float                              # completion time of first token
+    batch_ref: Optional[object] = None       # LMCache holding this row
+    batch_row: int = 0
+
+    def materialize(self):
+        """Own KV slice, pulling it out of the batched cache if needed."""
+        if self.batch_ref is not None:
+            kv = self.batch_ref.kv
+            self.kv_k = kv.k[:, :, self.batch_row, :self.cap]
+            self.kv_v = kv.v[:, :, self.batch_row, :self.cap]
+            self.batch_ref = None
+        return self.kv_k, self.kv_v
 
 
 @dataclass
 class RequestResult:
     rid: int
-    logits: np.ndarray                       # [V] last-token logits
+    logits: np.ndarray                       # [V] logits of the last step
     arrival: float
     completion: float
-    n_tokens: int
+    n_tokens: int                            # prompt length
+    tokens: Optional[np.ndarray] = None      # generated ids (None: score-only)
+    ttft: Optional[float] = None             # first-token completion time
 
     @property
     def latency(self) -> float:
         return self.completion - self.arrival
 
+    @property
+    def n_generated(self) -> int:
+        return 0 if self.tokens is None else int(len(self.tokens))
+
+    @property
+    def ttft_latency(self) -> Optional[float]:
+        return None if self.ttft is None else self.ttft - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Time per output token over the decode phase (excludes prefill)."""
+        if self.ttft is None or self.n_generated < 2:
+            return None
+        return (self.completion - self.ttft) / (self.n_generated - 1)
+
 
 class ServingEngine:
-    """Queue -> micro-batch -> plan-cached distributed dispatch."""
+    """Queue -> prefill/decode micro-batches -> plan-cached dispatch."""
 
     def __init__(self, server: MoEServer, ecfg: Optional[EngineConfig] = None,
                  clock: Callable[[], float] = time.perf_counter):
@@ -67,50 +135,82 @@ class ServingEngine:
         self.ecfg = ecfg or EngineConfig()
         self.clock = clock
         self._queue: Deque[Request] = deque()
+        self._active: "OrderedDict[int, DecodeSlot]" = OrderedDict()
         self._path_states: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self._next_rid = 0
         self.layer_stats: Deque[LayerStats] = deque(
             maxlen=self.ecfg.stats_window)
         self._finetunes = 0
         self._layers_served = 0
+        self.last_step_end: Optional[float] = None   # stamp of the last step
+        # (rids, LMCache) of the last decode batch: reused verbatim while
+        # the batch membership is unchanged, so steady-state decoding does
+        # not re-pad/re-stack every request's cache each token
+        self._dec_batch: Optional[tuple] = None
 
     # --- queueing -----------------------------------------------------------
     def submit(self, tokens, arrival: Optional[float] = None,
-               prev_rid: Optional[int] = None) -> int:
+               prev_rid: Optional[int] = None,
+               max_new_tokens: int = 0) -> int:
         """Enqueue one request; returns its id.  ``prev_rid`` names an
         earlier request of the same stream: the new request seeds its
-        rolling path-ID state from that request's final state."""
+        rolling path-ID state from that request's final state.
+        ``max_new_tokens > 0`` turns the request into a generation request
+        that decodes incrementally through the KV cache after prefill."""
         tokens = np.asarray(tokens).reshape(-1)
         rid = self._next_rid
         self._next_rid += 1
         state = None if prev_rid is None else self.request_path_state(prev_rid)
         req = Request(rid, tokens,
                       self.clock() if arrival is None else arrival,
-                      path_state=state)
+                      path_state=state, max_new_tokens=int(max_new_tokens))
         self._queue.append(req)
         return rid
 
     def pending(self) -> int:
         return len(self._queue)
 
+    def active(self) -> int:
+        return len(self._active)
+
+    def has_work(self) -> bool:
+        return bool(self._queue or self._active)
+
     def request_path_state(self, rid: int) -> Optional[np.ndarray]:
         for req in self._queue:             # still waiting: pre-step state
             if req.rid == rid:
                 return req.path_state
+        slot = self._active.get(rid)        # mid-decode: state so far
+        if slot is not None:
+            return np.asarray(slot.path_history, np.int64)
         return self._path_states.get(rid)
 
     # --- micro-batch formation ---------------------------------------------
-    def _form_microbatch(self) -> List[Request]:
+    def _form_microbatch(self, budget: Optional[int] = None,
+                         gen_slots: Optional[int] = None) -> List[Request]:
         """FCFS under the token budget; always admits the queue head so an
-        over-budget single request still makes progress."""
+        over-budget single request still makes progress (unless decodes
+        already consumed the whole budget: ``budget <= 0``).  Generating
+        requests are additionally admitted only while free decode slots
+        remain (``gen_slots``, default ``max_batch_requests - active``) —
+        the continuous-batching backpressure that bounds the in-flight KV
+        working set; FCFS order is preserved, so a blocked generating head
+        also holds back later arrivals."""
         ecfg = self.ecfg
         batch: List[Request] = []
-        budget = ecfg.max_batch_tokens
+        budget = ecfg.max_batch_tokens if budget is None else budget
+        if gen_slots is None:
+            gen_slots = max(0, ecfg.max_batch_requests - len(self._active))
+        admit_head = budget > 0
         while self._queue and len(batch) < ecfg.max_batch_requests:
             nxt = self._queue[0]
             cost = nxt.tokens.shape[0]
-            if batch and cost > budget:
+            if cost > budget and not (admit_head and not batch):
                 break
+            if nxt.max_new_tokens > 1:
+                if gen_slots <= 0:
+                    break               # no decode slot free: FCFS waits
+                gen_slots -= 1
             batch.append(self._queue.popleft())
             budget -= cost
         return batch
@@ -120,20 +220,125 @@ class ServingEngine:
         return 1 << (n - 1).bit_length()
 
     def _remember_state(self, rid: int, state: np.ndarray) -> None:
-        self._path_states[rid] = state
-        while len(self._path_states) > self.ecfg.state_cache:
-            self._path_states.popitem(last=False)
+        self._path_states[rid] = np.asarray(state)
+        self._path_states.move_to_end(rid)
+        excess = len(self._path_states) - self.ecfg.state_cache
+        if excess <= 0:
+            return
+        for old in list(self._path_states):
+            if excess <= 0:
+                break
+            if old in self._active:          # never drop mid-decode state
+                continue
+            del self._path_states[old]
+            excess -= 1
 
     # --- serving ------------------------------------------------------------
     def step(self, now: Optional[float] = None, time_scale: float = 1.0
              ) -> List[RequestResult]:
-        """Serve one micro-batch from the queue; returns completed
-        requests (empty when the queue is idle).  With ``now`` given,
+        """Serve one micro-batch: all in-flight decodes (one token each,
+        admitted first) plus newly queued prefills under the remaining
+        token budget.  Returns requests completed this step (possibly
+        empty while generation is in flight).  With ``now`` given,
         completions are stamped ``now + wall_service * time_scale``
         (virtual-clock replay); otherwise from the engine clock."""
-        batch = self._form_microbatch()
-        if not batch:
+        ecfg = self.ecfg
+        decodes = list(self._active.values())[:ecfg.max_batch_requests]
+        decodes = decodes[:ecfg.max_batch_tokens]
+        prefills = self._form_microbatch(
+            budget=ecfg.max_batch_tokens - len(decodes))
+        if not decodes and not prefills:
+            self.last_step_end = None
             return []
+
+        t0 = time.perf_counter()
+        dec_res = self._run_decodes(decodes) if decodes else None
+        pre_parts = self._run_prefills(prefills) if prefills else []
+        service = time.perf_counter() - t0
+        completion = self.clock() if now is None else now + service * time_scale
+        self.last_step_end = completion
+
+        out: List[RequestResult] = []
+        if dec_res is not None:
+            out.extend(self._finish_decodes(decodes, dec_res, completion))
+        for group, res in pre_parts:
+            out.extend(self._finish_prefills(group, res, completion))
+        return out
+
+    # --- decode phase -------------------------------------------------------
+    def _run_decodes(self, slots: List[DecodeSlot]):
+        rids = tuple(s.rid for s in slots)
+        if self._dec_batch is not None and self._dec_batch[0] == rids:
+            cache = self._dec_batch[1]       # pos already advanced inside
+            b = cache.kv.k.shape[2]
+        else:
+            b_real = len(slots)
+            b = self._bucket_rows(b_real) if self.ecfg.pad_to_pow2 else b_real
+            s_max = max(s.cap for s in slots)
+
+            def pad_kv(a, cap):
+                if cap < s_max:
+                    a = jnp.pad(a, ((0, 0), (0, 0), (0, s_max - cap),
+                                    (0, 0), (0, 0)))
+                return a
+
+            ks, vs = [], []
+            for s in slots:
+                k, v = s.materialize()
+                ks.append(pad_kv(k, s.cap))
+                vs.append(pad_kv(v, s.cap))
+            for _ in range(b - b_real):
+                ks.append(jnp.zeros_like(ks[0]))
+                vs.append(jnp.zeros_like(vs[0]))
+            kv = KVCache(jnp.stack(ks, axis=2), jnp.stack(vs, axis=2))
+            pos = np.zeros((b,), np.int32)
+            for i, s in enumerate(slots):
+                pos[i] = s.pos
+            cache = LMCache(kv, None, None, jnp.asarray(pos))
+        tokens = np.zeros((b,), np.int64)
+        path = np.zeros((b,), np.int64)
+        valid = np.zeros((b,), bool)
+        for i, s in enumerate(slots):
+            tokens[i] = s.gen_tokens[-1]
+            path[i] = s.path_scalar
+            valid[i] = True
+        res = self.server.decode_batch(tokens, cache, path, valid=valid)
+        self._record_stats(res.stats)
+        self._dec_batch = (rids, res.cache)
+        return res
+
+    def _finish_decodes(self, slots, res, completion) -> List[RequestResult]:
+        out = []
+        done = False
+        for i, slot in enumerate(slots):
+            nxt = int(np.argmax(res.logits[i]))
+            slot.gen_tokens.append(nxt)
+            slot.path_scalar = int(res.path_state[i])
+            slot.path_history.append(slot.path_scalar)
+            slot.pos += 1
+            slot.kv_k = slot.kv_v = None     # row lives in the batched cache
+            slot.batch_ref = res.cache
+            slot.batch_row = i
+            if len(slot.gen_tokens) >= slot.max_new_tokens:
+                out.append(self._complete_slot(slot, res.logits[i],
+                                               completion))
+                done = True
+        if done:                 # membership changes: next step re-stacks
+            self._dec_batch = None
+        return out
+
+    def _complete_slot(self, slot: DecodeSlot, logits,
+                       completion: float) -> RequestResult:
+        del self._active[slot.rid]
+        self._remember_state(slot.rid,
+                             np.asarray(slot.path_history, np.int64))
+        return RequestResult(slot.rid, np.asarray(logits), slot.arrival,
+                             completion, slot.prompt_len,
+                             tokens=np.asarray(slot.gen_tokens, np.int64),
+                             ttft=slot.ttft)
+
+    # --- prefill phase ------------------------------------------------------
+    def _assemble(self, batch: List[Request]):
         b_real = len(batch)
         b = self._bucket_rows(b_real) if self.ecfg.pad_to_pow2 else b_real
         s = max(r.tokens.shape[0] for r in batch)
@@ -147,28 +352,75 @@ class ServingEngine:
             if r.path_state is not None:
                 m = min(n, r.path_state.shape[0])
                 path_init[i, :m] = r.path_state[:m]
+        return tokens, lengths, path_init
 
-        t0 = time.perf_counter()
-        res = self.server.serve_batch(tokens, lengths=lengths,
-                                      path_init=path_init)
-        service = time.perf_counter() - t0
-        self.layer_stats.extend(res.stats)
-        self._finetunes += sum(s_.finetuned for s_ in res.stats)
-        self._layers_served += len(res.stats)
-        completion = self.clock() if now is None else now + service * time_scale
+    def _run_prefills(self, batch: List[Request]):
+        """Score-only rows (max_new_tokens <= 1: no decode cache needed)
+        and generating rows run as separate forwards, so a long score-only
+        prompt never inflates — or, under a sliding window, invalidates —
+        the generating rows' cache allocation.  Returns (group, result)
+        pairs."""
+        gen = [r for r in batch if r.max_new_tokens > 1]
+        score = [r for r in batch if r.max_new_tokens <= 1]
+        parts = []
+        if score:
+            tokens, lengths, path_init = self._assemble(score)
+            res = self.server.serve_batch(tokens, lengths=lengths,
+                                          path_init=path_init)
+            self._record_stats(res.stats)
+            parts.append((score, res))
+        if gen:
+            tokens, lengths, path_init = self._assemble(gen)
+            cache_len = max(r.tokens.shape[0] + r.max_new_tokens for r in gen)
+            res = self.server.prefill_batch(tokens, lengths=lengths,
+                                            path_init=path_init,
+                                            cache_len=cache_len)
+            self._record_stats(res.stats)
+            parts.append((gen, res))
+        return parts
 
-        out: List[RequestResult] = []
+    def _finish_prefills(self, batch, res,
+                         completion) -> List[RequestResult]:
+        out = []
         for i, r in enumerate(batch):
-            n = int(lengths[i])
-            self._remember_state(r.rid, res.path_ids[i, :n].copy())
-            out.append(RequestResult(r.rid, res.logits[i], r.arrival,
-                                     completion, n))
+            n = r.tokens.shape[0]
+            path_row = np.asarray(res.path_ids[i, :n])
+            if r.max_new_tokens <= 0:
+                self._remember_state(r.rid, path_row.copy())
+                out.append(RequestResult(r.rid, res.logits[i], r.arrival,
+                                         completion, n))
+                continue
+            first = int(np.argmax(res.logits[i]))
+            if r.max_new_tokens == 1:
+                self._remember_state(r.rid, path_row.copy())
+                out.append(RequestResult(
+                    r.rid, res.logits[i], r.arrival, completion, n,
+                    tokens=np.asarray([first], np.int64), ttft=completion))
+                continue
+            cap = n + r.max_new_tokens
+            slot = DecodeSlot(
+                rid=r.rid, arrival=r.arrival, prompt_len=n,
+                max_new_tokens=r.max_new_tokens, cap=cap,
+                kv_k=None, kv_v=None,
+                pos=n, path_scalar=int(path_row[-1]),
+                path_history=[int(p) for p in path_row],
+                gen_tokens=[first], ttft=completion,
+                batch_ref=res.cache, batch_row=i)
+            self._active[r.rid] = slot
+            # pin the prompt's path state so follow-ups submitted while the
+            # stream is still decoding can branch from it
+            self._remember_state(r.rid, path_row.copy())
         return out
 
+    def _record_stats(self, stats) -> None:
+        self.layer_stats.extend(stats)
+        self._finetunes += sum(s.finetuned for s in stats)
+        self._layers_served += len(stats)
+
     def run(self) -> List[RequestResult]:
-        """Drain the queue in wall-clock mode."""
+        """Drain queue AND in-flight generation in wall-clock mode."""
         results: List[RequestResult] = []
-        while self._queue:
+        while self.has_work():
             results.extend(self.step())
         return results
 
@@ -184,26 +436,52 @@ class ServingEngine:
             if self._layers_served else 0.0
 
 
-def simulate(engine: ServingEngine, requests, time_scale: float = 1.0
-             ) -> List[RequestResult]:
+def summarize_results(results: List[RequestResult]) -> dict:
+    """Latency / TTFT / time-per-output-token percentiles (seconds) and
+    decode throughput over a completed result set — the one summarization
+    shared by the serve driver, the example, and the traffic benchmark."""
+    lat = np.array([r.latency for r in results])
+    ttft = np.array([r.ttft_latency for r in results
+                     if r.ttft_latency is not None])
+    tpot = np.array([r.tpot for r in results if r.tpot is not None])
+    n_gen = sum(r.n_generated for r in results)
+    span = (max(r.completion for r in results) -
+            min(r.arrival for r in results)) if results else 0.0
+    pct = lambda a, q: float(np.percentile(a, q)) if a.size else float("nan")
+    return {
+        "n": len(results),
+        "latency_p50": pct(lat, 50), "latency_p95": pct(lat, 95),
+        "ttft_p50": pct(ttft, 50), "ttft_p95": pct(ttft, 95),
+        "tpot_p50": pct(tpot, 50), "tpot_p95": pct(tpot, 95),
+        "gen_tokens": n_gen,
+        "gen_tok_s": n_gen / span if span > 0 else 0.0,
+    }
+
+
+def simulate(engine: ServingEngine, requests, time_scale: float = 1.0,
+             max_new_tokens: int = 0) -> List[RequestResult]:
     """Open-loop trace replay: ``requests`` is an iterable of
     (tokens, arrival_time) virtual-time pairs.  Queueing delay comes from
     the virtual clock; service time is the measured wall time of each step
-    scaled by ``time_scale``.  Returns per-request results whose
-    ``latency`` mixes both — the standard open-loop p50/p95 methodology."""
+    scaled by ``time_scale``.  With ``max_new_tokens > 0`` every request
+    generates that many tokens through the incremental-decode path, and a
+    request's latency spans prefill + all its decode steps.  Returns
+    per-request results whose ``latency`` mixes both — the standard
+    open-loop p50/p95 methodology."""
     trace = [(np.asarray(tok).reshape(-1), float(at)) for tok, at in requests]
     trace.sort(key=lambda p: p[1])
     vclock = 0.0
     i = 0
     results: List[RequestResult] = []
-    while i < len(trace) or engine.pending():
-        if not engine.pending():
+    while i < len(trace) or engine.has_work():
+        if not engine.has_work():
             vclock = max(vclock, trace[i][1])       # idle until next arrival
         while i < len(trace) and trace[i][1] <= vclock:
-            engine.submit(trace[i][0], arrival=trace[i][1])
+            engine.submit(trace[i][0], arrival=trace[i][1],
+                          max_new_tokens=max_new_tokens)
             i += 1
         done = engine.step(now=vclock, time_scale=time_scale)
-        if done:
-            vclock = done[0].completion             # one stamp per batch
-            results.extend(done)
+        if engine.last_step_end is not None:
+            vclock = max(vclock, engine.last_step_end)  # one stamp per batch
+        results.extend(done)
     return results

@@ -18,10 +18,22 @@ Per MoE layer the Server:
            plan.  Device loads are additionally recorded for the latency
            model.
 
+That per-layer core (``_serve_moe``) backs three entry points:
+
+  ``serve_batch``    full-sequence scoring (no cache; the PR-1 path)
+  ``prefill_batch``  full-sequence + KV-cache capture: returns last-token
+                     logits, an ``LMCache`` sized to ``cache_len`` and the
+                     rolling path-ID state, so generation can continue
+                     incrementally;
+  ``decode_batch``   ONE token per request against the cache — the paper's
+                     latency-bound decoding regime (§5): tiny batches,
+                     popularity skew, per-layer plan-scheduled dispatch.
+
 The Server drives real model weights (GroupParams stacks: the paper models,
 mixtral, llama4) and produces exact logits plus per-layer scheduling stats.
 ``runtime.engine`` wraps it in a continuous-batching front end (request
-queue, token-budget micro-batches, per-request path state).
+queue, prefill/decode lifecycle, token-budget micro-batches, per-request
+path + KV state).
 """
 from __future__ import annotations
 
@@ -40,8 +52,9 @@ from repro.core.placement import (PlacementPlan, PlanCache, identity_plan,
 from repro.core.popularity import PathProfile
 from repro.core.serving import PlanArrays, dp_shard_count, serve_moe_layer
 from repro.models import lm as lm_mod
-from repro.models.attention import attention
+from repro.models.attention import KVCache, attention, decode_attention
 from repro.models.layers import rms_norm
+from repro.models.lm import LMCache
 
 
 @dataclass
@@ -73,6 +86,20 @@ class ServeResult(NamedTuple):
     path_ids: np.ndarray           # [B, S] final rolling path state
 
 
+class PrefillResult(NamedTuple):
+    logits: np.ndarray             # [B, V] last-valid-token logits
+    stats: List[LayerStats]
+    path_ids: np.ndarray           # [B, S] final rolling path state
+    cache: LMCache                 # KV cache sized to cache_len, pos=lengths
+
+
+class DecodeResult(NamedTuple):
+    logits: np.ndarray             # [B, V] next-token logits
+    stats: List[LayerStats]
+    path_state: np.ndarray         # [B] rolling path state after this token
+    cache: LMCache                 # updated KV cache, pos advanced by 1
+
+
 class MoEServer:
     def __init__(self, cfg: ModelConfig, params, profile: PathProfile,
                  scfg: Optional[ServerConfig] = None, mesh=None):
@@ -88,19 +115,39 @@ class MoEServer:
         self.plan_cache = PlanCache(top_k=scfg.top_k) if scfg.plan_cache \
             else None
         self._attn = jax.jit(self._attn_fn)
+        self._attn_dec = jax.jit(self._attn_dec_fn)
         self._gate = jax.jit(self._gate_fn)
         self._dispatch = jax.jit(self._dispatch_fn,
                                  static_argnames=("min_replicas", "cap"))
         self._ffn = jax.jit(partial(lm_mod._ffn_apply, ffn_type=cfg.ffn_type,
                                     mesh=None))
+        # weights are static across requests: cast once, slice layer groups
+        # once, keep the unembed matrix device-resident — incremental decode
+        # calls this machinery once per generated token, so per-call casts
+        # and host matmuls would dominate TPOT
+        self._cparams = lm_mod.cast_for_compute(cfg, params)
+        self._w_unembed = jnp.asarray(lm_mod.unembed_weight(self._cparams))
+        self._gp_cache: dict = {}
+        self._plan_arrays: dict = {}
 
     # --- jitted layer pieces ----------------------------------------------
     def _attn_fn(self, gp, j, x):
+        """Full-sequence attention block; also returns the K/V projections
+        so prefill can populate the decode cache for free."""
         a_p = jax.tree.map(lambda a: a[j] if a is not None else None, gp.attn,
                            is_leaf=lambda a: a is None)
         h = rms_norm(x, gp.ln1[j], self.cfg.norm_eps)
-        y, _ = attention(None, a_p, h, self.cfg)
-        return x + y
+        y, kv = attention(None, a_p, h, self.cfg)
+        return x + y, kv.k, kv.v
+
+    def _attn_dec_fn(self, gp, j, x, k, v, pos):
+        """Single-token attention block against the KV cache.  x: [B,1,d];
+        k/v: [B, S_cap, KV, hd]; pos: [B] absolute positions."""
+        a_p = jax.tree.map(lambda a: a[j] if a is not None else None, gp.attn,
+                           is_leaf=lambda a: a is None)
+        h = rms_norm(x, gp.ln1[j], self.cfg.norm_eps)
+        y, kv = decode_attention(None, a_p, h, KVCache(k, v), pos, self.cfg)
+        return x + y, kv.k, kv.v
 
     def _gate_fn(self, router, h2):
         logits = h2 @ router
@@ -175,6 +222,70 @@ class MoEServer:
                 self.plan_cache.store(li, plan)
         return plan, finetuned, accurate, reused
 
+    # --- the shared per-layer two-phase core -------------------------------
+    def _serve_moe(self, li: int, gp, h2, valid: np.ndarray,
+                   path_ids: np.ndarray, has_state: bool):
+        """Phase-1 estimate -> PlanCache lookup -> gate -> phase-2
+        fine-tune on drift -> plan-honoring dispatch, for one MoE layer.
+
+        h2: [T, d] hidden states; valid: [T] bool; path_ids: [T] rolling
+        path hashes.  ``has_state`` marks carried path state (incremental
+        decode), which lets early layers use the profile instead of the
+        uniform cold-start estimate.  Returns (y [T, d], top1 [T], stats).
+        """
+        cfg, scfg = self.cfg, self.scfg
+        if scfg.schedule_policy == "uniform" or not scfg.use_estimation or \
+                (li < scfg.path_len and not has_state):
+            est = np.full((cfg.moe.n_experts,),
+                          1.0 / cfg.moe.n_experts, np.float32)
+        else:
+            est = self.profile.estimate_popularity(
+                li, path_ids[valid] if valid.any() else path_ids)
+
+        _, idx = self._gate(gp.moe.router, h2)
+        top1 = np.asarray(idx[:, 0])
+        actual = np.bincount(top1, weights=valid.astype(np.float64),
+                             minlength=cfg.moe.n_experts)
+        actual = actual / max(actual.sum(), 1.0)
+
+        plan, finetuned, accurate, reused = self._plan_layer(li, est, actual)
+
+        # dispatch under the final plan (distributed path); capacity sized
+        # from valid tokens, not the padded batch
+        se, ro, nr = self._plan_device(plan)
+        y = self._dispatch(
+            gp.moe, h2, se, ro, nr,
+            min_replicas=int(plan.n_replicas.min()),
+            cap=self._valid_capacity(int(valid.sum()), h2.shape[0]))
+
+        # loads are always evaluated against the ACTUAL popularity — the
+        # plan decides placement, the workload decides load
+        stat = LayerStats(li, np.asarray(est), np.asarray(actual), finetuned,
+                          accurate, reused,
+                          plan.device_load(actual.astype(np.float32)))
+        return y, top1, stat
+
+    def _plan_device(self, plan: PlacementPlan):
+        """Device-resident plan arrays, cached per plan object — the
+        PlanCache keeps plan identity stable across batches/steps, so the
+        host->device upload happens once per (layer, popularity regime)."""
+        ent = self._plan_arrays.get(id(plan))
+        if ent is None or ent[0] is not plan:
+            if len(self._plan_arrays) > 256:
+                self._plan_arrays.clear()
+            ent = (plan, jnp.asarray(plan.slot_expert),
+                   jnp.asarray(plan.replica_of), jnp.asarray(plan.n_replicas))
+            self._plan_arrays[id(plan)] = ent
+        return ent[1], ent[2], ent[3]
+
+    def _group_params(self, g):
+        gp = self._gp_cache.get(g)
+        if gp is None:
+            gp = jax.tree.map(lambda a: a[g] if a is not None else None,
+                              self._cparams.stack, is_leaf=lambda a: a is None)
+            self._gp_cache[g] = gp
+        return gp
+
     # --- serving loop -------------------------------------------------------
     def serve(self, tokens: np.ndarray, lengths=None) -> tuple:
         """tokens: [B, S] -> (last logits [B, V], stats list[LayerStats])."""
@@ -183,7 +294,7 @@ class MoEServer:
 
     def serve_batch(self, tokens: np.ndarray, lengths=None,
                     path_init: Optional[np.ndarray] = None) -> ServeResult:
-        """Serve one (micro-)batch through the full model.
+        """Serve one (micro-)batch through the full model (no cache).
 
         tokens:    [B, S] token ids (rows may be right-padded)
         lengths:   optional [B] valid-token counts; 0 marks an all-padding
@@ -194,30 +305,58 @@ class MoEServer:
         path_init: optional [B, S] rolling path-ID state from a previous
                    step of the same requests (engine-carried).
         """
-        cfg, scfg = self.cfg, self.scfg
-        tokens = np.asarray(tokens)
-        b, s = tokens.shape
-        if lengths is None:
-            lengths = np.full((b,), s, np.int64)
-        lengths = np.asarray(lengths, np.int64)
-        params = lm_mod.cast_for_compute(cfg, self.params)
-        x = params.embed[jnp.asarray(tokens)].astype(jnp.dtype(cfg.dtype))
-        d = x.shape[-1]
+        logits, stats, path_ids, _ = self._forward(tokens, lengths, path_init,
+                                                   cache_len=0)
+        return ServeResult(logits, stats, path_ids)
+
+    def prefill_batch(self, tokens: np.ndarray, lengths=None,
+                      path_init: Optional[np.ndarray] = None,
+                      cache_len: Optional[int] = None) -> PrefillResult:
+        """serve_batch + KV-cache capture: the prompt phase of generation.
+
+        ``cache_len`` sizes the per-row cache capacity (>= S; pass
+        prompt_len + max_new_tokens so decode never overflows).  The
+        returned cache's ``pos`` is each row's valid length, so
+        ``decode_batch`` continues exactly where the prompt ended.
+        """
+        s = np.asarray(tokens).shape[1]
+        cache_len = max(cache_len or s, s)
+        # the incremental path writes the cache linearly (no ring); a
+        # sliding-window model whose context exceeded the window would
+        # silently diverge from full re-prefill — reject it loudly
+        if self.cfg.sliding_window and cache_len > self.cfg.sliding_window:
+            raise NotImplementedError(
+                "incremental decode does not support sliding-window "
+                f"contexts beyond the window ({cache_len} > "
+                f"{self.cfg.sliding_window})")
+        logits, stats, path_ids, cache = self._forward(
+            tokens, lengths, path_init, cache_len=cache_len)
+        return PrefillResult(logits, stats, path_ids, cache)
+
+    def _walk_stack(self, x, *, attn, valid, path_ids, has_state, shape):
+        """The group/layer walk shared by full-sequence forward and
+        incremental decode: attention (via ``attn(gp, j, x) ->
+        (x, k_j, v_j)``; k_j None = no cache capture), dense FFN for
+        non-MoE sublayers, and the two-phase MoE core for MoE sublayers.
+        ``shape`` is the (b, s) token grid of ``x``.  Returns
+        (x, stats, path_ids, ks, vs) with ks/vs per-group stacks."""
+        cfg = self.cfg
+        b, s = shape
         t = b * s
-        valid = (np.arange(s)[None, :] < lengths[:, None]).reshape(t)
-        path_ids = np.zeros((t,), np.int64) if path_init is None \
-            else np.asarray(path_init, np.int64).reshape(t)
+        d = x.shape[-1]
         stats: List[LayerStats] = []
+        ks: List[jax.Array] = []
+        vs: List[jax.Array] = []
         n_groups = cfg.n_layers // self.every
         moe_layer_idx = 0
         for g in range(n_groups):
-            gp = jax.tree.map(lambda a: a[g] if a is not None else None,
-                              self.params.stack, is_leaf=lambda a: a is None)
-            gp = lm_mod.cast_for_compute(cfg, lm_mod.LMParams(
-                params.embed, None, None, None, gp, params.final_norm, None)
-            ).stack
+            gp = self._group_params(g)
+            ks_g, vs_g = [], []
             for j in range(self.every):
-                x = self._attn(gp, j, x)
+                x, k_j, v_j = attn(gp, j, x)
+                if k_j is not None:
+                    ks_g.append(k_j)
+                    vs_g.append(v_j)
                 h = rms_norm(x, gp.ln2[j], cfg.norm_eps)
                 is_moe = j == self.every - 1
                 if not is_moe:
@@ -228,55 +367,103 @@ class MoEServer:
                     x = x + self._ffn(ffn_p, h)
                     continue
                 h2 = h.reshape(t, d)
-                li = moe_layer_idx
-
-                # phase 1: estimate ahead of gating
-                if scfg.schedule_policy == "uniform" or \
-                        not scfg.use_estimation or li < scfg.path_len:
-                    est = np.full((cfg.moe.n_experts,),
-                                  1.0 / cfg.moe.n_experts, np.float32)
-                else:
-                    est = self.profile.estimate_popularity(
-                        li, path_ids[valid] if valid.any() else path_ids)
-
-                _, idx = self._gate(gp.moe.router, h2)
-                top1 = np.asarray(idx[:, 0])
-                actual = np.bincount(top1, weights=valid.astype(np.float64),
-                                     minlength=cfg.moe.n_experts)
-                actual = actual / max(actual.sum(), 1.0)
-
-                plan, finetuned, accurate, reused = \
-                    self._plan_layer(li, est, actual)
-
-                # dispatch under the final plan (distributed path);
-                # capacity sized from valid tokens, not the padded batch
-                y = self._dispatch(
-                    gp.moe, h2, jnp.asarray(plan.slot_expert),
-                    jnp.asarray(plan.replica_of),
-                    jnp.asarray(plan.n_replicas),
-                    min_replicas=int(plan.n_replicas.min()),
-                    cap=self._valid_capacity(int(valid.sum()), t))
+                y, top1, stat = self._serve_moe(moe_layer_idx, gp, h2, valid,
+                                                path_ids,
+                                                has_state=has_state)
                 moe_y = y.reshape(b, s, d)
                 if gp.shared is not None:
                     moe_y = moe_y + self._ffn(gp.shared, h)
                 x = x + moe_y
-
-                # loads are always evaluated against the ACTUAL popularity —
-                # the plan decides placement, the workload decides load
-                stats.append(LayerStats(
-                    li, np.asarray(est), np.asarray(actual), finetuned,
-                    accurate, reused,
-                    plan.device_load(actual.astype(np.float32))))
+                stats.append(stat)
                 path_ids = (path_ids * cfg.moe.n_experts + top1) \
                     % self.profile.n_buckets
                 moe_layer_idx += 1
-        x = rms_norm(x, lm_mod.cast_for_compute(cfg, self.params).final_norm,
-                     cfg.norm_eps)
+            if ks_g:
+                ks.append(jnp.stack(ks_g))
+                vs.append(jnp.stack(vs_g))
+        return x, stats, path_ids, ks, vs
+
+    def _forward(self, tokens, lengths, path_init, *, cache_len: int):
+        """Full-sequence forward; captures an LMCache when cache_len > 0."""
+        cfg = self.cfg
+        tokens = np.asarray(tokens)
+        b, s = tokens.shape
+        if lengths is None:
+            lengths = np.full((b,), s, np.int64)
+        lengths = np.asarray(lengths, np.int64)
+        x = self._cparams.embed[jnp.asarray(tokens)].astype(
+            jnp.dtype(cfg.dtype))
+        valid = (np.arange(s)[None, :] < lengths[:, None]).reshape(b * s)
+        path_ids = np.zeros((b * s,), np.int64) if path_init is None \
+            else np.asarray(path_init, np.int64).reshape(b * s)
+
+        def attn(gp, j, x):
+            x, k_j, v_j = self._attn(gp, j, x)
+            if not cache_len:
+                return x, None, None
+            pad = cache_len - s
+            if pad:
+                k_j = jnp.pad(k_j, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                v_j = jnp.pad(v_j, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            return x, k_j, v_j
+
+        x, stats, path_ids, ks, vs = self._walk_stack(
+            x, attn=attn, valid=valid, path_ids=path_ids,
+            has_state=False, shape=(b, s))
+        x = rms_norm(x, self._cparams.final_norm, cfg.norm_eps)
         last = np.maximum(lengths - 1, 0)
         x_last = np.asarray(x)[np.arange(b), last]
-        logits = x_last @ np.asarray(lm_mod.unembed_weight(params))
-        return ServeResult(np.asarray(logits), stats,
-                           path_ids.reshape(b, s))
+        logits = np.asarray(jnp.asarray(x_last) @ self._w_unembed)
+        cache = None
+        if cache_len:
+            kv = KVCache(jnp.stack(ks), jnp.stack(vs))
+            cache = LMCache(kv, None, None, jnp.asarray(lengths, jnp.int32))
+        return (np.asarray(logits), stats, path_ids.reshape(b, s), cache)
+
+    def decode_batch(self, tokens, cache: LMCache, path_state,
+                     valid=None) -> DecodeResult:
+        """One incremental decode step: ONE token per in-flight request.
+
+        tokens:     [B] the most recent token of each request
+        cache:      LMCache from prefill_batch / a previous decode_batch
+                    (kv: [G, every, B, S_cap, KV, hd]; pos: [B])
+        path_state: [B] rolling path-ID state (most recent token's hash)
+        valid:      optional [B] bool; False rows are batch padding
+
+        Runs the SAME per-layer two-phase core as prefill — estimate from
+        the carried path state, PlanCache with top-2k drift invalidation,
+        phase-2 fine-tune on miss, plan-honoring dispatch — in the regime
+        the paper's §5 targets: tiny latency-bound batches.  Per-layer
+        top-1 choices keep rolling the path state during generation.
+        """
+        cfg = self.cfg
+        tokens = np.asarray(tokens).reshape(-1)
+        b = tokens.shape[0]
+        if valid is None:
+            valid = np.ones((b,), bool)
+        valid = np.asarray(valid, bool)
+        path_ids = np.asarray(path_state, np.int64).reshape(b).copy()
+        x = self._cparams.embed[jnp.asarray(tokens)][:, None].astype(
+            jnp.dtype(cfg.dtype))                              # [B, 1, d]
+        pos = cache.pos
+        group = [0]   # mutable layer-group cursor for the attn closure
+
+        def attn(gp, j, x):
+            g = group[0]
+            x, k_j, v_j = self._attn_dec(gp, j, x, cache.kv.k[g, j],
+                                         cache.kv.v[g, j], pos)
+            if j == self.every - 1:
+                group[0] += 1
+            return x, k_j, v_j
+
+        x, stats, path_ids, ks, vs = self._walk_stack(
+            x, attn=attn, valid=valid, path_ids=path_ids,
+            has_state=True, shape=(b, 1))
+        x = rms_norm(x, self._cparams.final_norm, cfg.norm_eps)
+        logits = np.asarray(x[:, 0] @ self._w_unembed)
+        new_cache = LMCache(KVCache(jnp.stack(ks), jnp.stack(vs)), None, None,
+                            pos + 1)
+        return DecodeResult(np.asarray(logits), stats, path_ids, new_cache)
 
 
 def profile_from_training(cfg: ModelConfig, params, batches,

@@ -48,12 +48,15 @@ def test_arch_smoke(arch):
 
     if cfg.causal:
         cache = init_cache(cfg, B, 16, jnp.float32)
-        logits, cache2 = jax.jit(
+        logits, cache2, experts = jax.jit(
             lambda p, c, t: decode_step(None, cfg, p, c, t))(
             params, cache, jnp.zeros((B,), jnp.int32))
         assert logits.shape == (B, cfg.vocab_size)
         assert np.isfinite(np.asarray(logits, np.float32)).all()
         assert int(cache2.pos[0]) == 1
+        if cfg.moe.enabled and not cfg.layer_pattern:
+            assert experts.shape == (cfg.n_moe_layers, B)
+            assert (np.asarray(experts) < cfg.moe.n_experts).all()
 
 
 @pytest.mark.parametrize("arch", ["qwen3-8b", "mixtral-8x22b", "zamba2-1.2b",
@@ -71,7 +74,7 @@ def test_decode_matches_prefill(arch):
     logits = None
     step = jax.jit(lambda p, c, t: decode_step(None, cfg, p, c, t))
     for i in range(8):
-        logits, cache = step(params, cache, toks[:, i])
+        logits, cache, _ = step(params, cache, toks[:, i])
     np.testing.assert_allclose(np.asarray(logits, np.float32),
                                np.asarray(pre.logits, np.float32),
                                atol=2e-2, rtol=2e-2)

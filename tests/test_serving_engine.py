@@ -1,20 +1,23 @@
 """Serving engine: plan cache (§5.2 drift invalidation), slot capacity under
-replication, continuous-batching queue/micro-batch behavior, and numerics of
-the distributed dispatch path the server now routes through."""
+replication, continuous-batching queue/micro-batch behavior, numerics of
+the distributed dispatch path the server routes through, and the
+prefill/decode split (incremental KV-cache decoding must reproduce full
+re-prefill logits, and the engine must never re-run prefill mid-decode)."""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
+from repro.configs import REGISTRY, get_config
 from repro.configs.base import MoEConfig
 from repro.core import init_moe_params, moe_layer
-from repro.core.placement import (PlanCache, needs_finetune, plan_placement,
-                                  PlacementPlan)
+from repro.core.placement import (PlanCache, identity_plan, needs_finetune,
+                                  plan_placement, PlacementPlan)
 from repro.core.popularity import (PathProfile, estimation_accuracy,
                                    top2k_sets_match)
-from repro.core.serving import PlanArrays, serve_moe_layer, slot_capacity
+from repro.core.serving import (PlanArrays, serve_moe_layer, slot_capacity,
+                                stack_plan_arrays)
 from repro.models import lm as lm_mod
 from repro.runtime.engine import EngineConfig, ServingEngine, simulate
 from repro.runtime.server import MoEServer, ServerConfig
@@ -222,6 +225,268 @@ def test_engine_padding_rows_do_not_change_logits():
     for i, rid in enumerate(rids):
         np.testing.assert_allclose(results[rid].logits, direct.logits[i],
                                    atol=1e-4, rtol=1e-4)
+
+
+# --- incremental decode: prefill + decode_batch vs full re-prefill ----------
+
+def test_prefill_then_decode_matches_full_serve():
+    """The distributed analog of test_decode_matches_prefill: prefill the
+    first 8 tokens, then 4 incremental decode_batch steps (each one token
+    per request through the per-layer two-phase core) must reproduce the
+    full 12-token re-prefill logits."""
+    cfg, server = _smoke_server(capacity_factor=16.0)
+    rng = np.random.RandomState(11)
+    toks = rng.randint(0, cfg.vocab_size, (2, 12))
+    _, ref_server = _smoke_server(capacity_factor=16.0)
+    ref = ref_server.serve_batch(toks)
+
+    pre = server.prefill_batch(toks[:, :8], cache_len=12)
+    logits, cache, path = pre.logits, pre.cache, pre.path_ids[:, 7]
+    for i in range(8, 12):
+        dec = server.decode_batch(toks[:, i], cache, path)
+        logits, cache, path = dec.logits, dec.cache, dec.path_state
+        assert len(dec.stats) == cfg.n_moe_layers   # two-phase core per layer
+    np.testing.assert_allclose(logits, ref.logits, atol=1e-3, rtol=1e-3)
+    assert (np.asarray(cache.pos) == 12).all()
+    # the rolling path state kept advancing during decode
+    assert (path < server.profile.n_buckets).all()
+
+
+def test_prefill_batch_matches_serve_batch_logits():
+    """Cache capture must not perturb the forward numerics."""
+    cfg, server = _smoke_server()
+    toks = np.random.RandomState(12).randint(0, cfg.vocab_size, (2, 10))
+    _, ref_server = _smoke_server()
+    ref = ref_server.serve_batch(toks)
+    pre = server.prefill_batch(toks, cache_len=16)
+    np.testing.assert_allclose(pre.logits, ref.logits, atol=1e-5)
+    np.testing.assert_array_equal(pre.path_ids, ref.path_ids)
+    assert pre.cache.kv.k.shape[3] == 16            # [G, every, B, cap, ...]
+
+
+def test_decode_batch_padding_rows_are_inert():
+    """Bucketed decode batches carry all-padding rows; they must not change
+    valid rows' logits (capacity is sized from valid tokens)."""
+    cfg, server = _smoke_server(capacity_factor=16.0)
+    rng = np.random.RandomState(13)
+    toks = rng.randint(0, cfg.vocab_size, (2, 8))
+    pre = server.prefill_batch(toks, cache_len=10)
+    dec = server.decode_batch(toks[:, -1] * 0 + 7, pre.cache,
+                              pre.path_ids[:, -1])
+
+    _, server2 = _smoke_server(capacity_factor=16.0)
+    pre2 = server2.prefill_batch(toks, cache_len=10)
+    k, v = pre2.cache.kv.k, pre2.cache.kv.v
+    pad = jnp.zeros_like(k[:, :, :1])
+    cache4 = lm_mod.LMCache(
+        lm_mod.KVCache(jnp.concatenate([k, pad, pad], axis=2),
+                       jnp.concatenate([v, pad, pad], axis=2)),
+        None, None, jnp.concatenate([pre2.cache.pos,
+                                     jnp.zeros((2,), jnp.int32)]))
+    dec4 = server2.decode_batch(
+        np.array([7, 7, 0, 0]), cache4,
+        np.concatenate([np.asarray(pre2.path_ids[:, -1]), [0, 0]]),
+        valid=np.array([True, True, False, False]))
+    np.testing.assert_allclose(dec4.logits[:2], dec.logits, atol=1e-4,
+                               rtol=1e-4)
+
+
+# --- stacked per-layer plans through decode_step -----------------------------
+
+def test_decode_step_stacked_plans_and_expert_choices():
+    """decode_step must accept one plan per MoE layer (stacked PlanArrays)
+    and surface per-layer top-1 expert choices; heterogeneous placements
+    must not change logits (plans move experts, not math)."""
+    cfg = REGISTRY["mixtral-8x22b"].smoke()
+    params = lm_mod.init_params(cfg, jax.random.PRNGKey(1))
+    b = 2
+    cache = lm_mod.init_cache(cfg, b, 8, jnp.float32)
+    tok = jnp.zeros((b,), jnp.int32)
+    e = cfg.moe.n_experts
+    n_groups = cfg.n_layers // cfg.moe.every
+
+    single = PlanArrays.from_plan(identity_plan(e, e, max_pack=2))
+    l1, _, e1 = lm_mod.decode_step(None, cfg, params, cache, tok,
+                                   serve_plan=single, serve_top_k=1)
+    same = stack_plan_arrays([identity_plan(e, e, max_pack=2)] * n_groups)
+    assert same.stacked and same.slot_expert.shape[0] == n_groups
+    l2, _, e2 = lm_mod.decode_step(None, cfg, params, cache, tok,
+                                   serve_plan=same, serve_top_k=1)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+    assert e1.shape == (n_groups, b)
+
+    skew = [plan_placement(np.roll([.7, .1, .1, .1], i), e, max_pack=2)
+            for i in range(n_groups)]
+    l3, _, e3 = lm_mod.decode_step(None, cfg, params, cache, tok,
+                                   serve_plan=stack_plan_arrays(skew),
+                                   serve_top_k=1)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l3), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e3))
+
+
+# --- engine generation lifecycle ---------------------------------------------
+
+def _counting_server(server):
+    calls = {"prefill": 0, "decode": 0, "serve": 0, "decode_tokens": []}
+    orig_p, orig_d, orig_s = (server.prefill_batch, server.decode_batch,
+                              server.serve_batch)
+
+    def prefill(*a, **k):
+        calls["prefill"] += 1
+        return orig_p(*a, **k)
+
+    def decode(tokens, *a, **k):
+        calls["decode"] += 1
+        calls["decode_tokens"].append(np.asarray(tokens).size)
+        return orig_d(tokens, *a, **k)
+
+    def serve(*a, **k):
+        calls["serve"] += 1
+        return orig_s(*a, **k)
+
+    server.prefill_batch = prefill
+    server.decode_batch = decode
+    server.serve_batch = serve
+    return calls
+
+
+def test_engine_decoding_never_reruns_prefill():
+    """A generating request prefills exactly once; every later step is a
+    single-token decode whose batch size is the number of in-flight
+    requests — per-output-token cost independent of prompt length."""
+    cfg, server = _smoke_server(capacity_factor=16.0)
+    calls = _counting_server(server)
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=64))
+    rng = np.random.RandomState(21)
+    eng.submit(rng.randint(0, cfg.vocab_size, (24,)), arrival=0.0,
+               max_new_tokens=5)
+    results = eng.run()
+    assert len(results) == 1
+    assert calls["prefill"] == 1 and calls["serve"] == 0
+    assert calls["decode"] == 4                      # 5 tokens: 1 + 4 steps
+    assert all(n == 1 for n in calls["decode_tokens"])   # never the prompt
+    r = results[0]
+    assert r.n_generated == 5 and r.tokens.shape == (5,)
+    assert r.ttft is not None and r.ttft <= r.completion
+    assert (r.tokens < cfg.vocab_size).all() and np.isfinite(r.logits).all()
+
+
+def test_engine_generation_matches_manual_decode():
+    cfg, server = _smoke_server(capacity_factor=16.0)
+    rng = np.random.RandomState(22)
+    toks = rng.randint(0, cfg.vocab_size, (10,))
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=32))
+    eng.submit(toks, arrival=0.0, max_new_tokens=4)
+    out = eng.run()[0]
+
+    _, ref = _smoke_server(capacity_factor=16.0)
+    pre = ref.prefill_batch(toks[None], cache_len=14)
+    cur, gen = int(np.argmax(pre.logits[0])), []
+    gen.append(cur)
+    cache, path = pre.cache, pre.path_ids[:, -1]
+    for _ in range(3):
+        dec = ref.decode_batch([cur], cache, path)
+        cur = int(np.argmax(dec.logits[0]))
+        gen.append(cur)
+        cache, path = dec.cache, dec.path_state
+    np.testing.assert_array_equal(out.tokens, gen)
+
+
+def test_engine_mixes_decodes_with_new_prefills():
+    """An in-flight decode and a newly arrived prefill share one step."""
+    cfg, server = _smoke_server(capacity_factor=16.0)
+    calls = _counting_server(server)
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=64))
+    rng = np.random.RandomState(23)
+    r1 = eng.submit(rng.randint(0, cfg.vocab_size, (8,)), arrival=0.0,
+                    max_new_tokens=3)
+    eng.step(now=0.0)                                # prefill r1
+    assert eng.active() == 1 and calls["prefill"] == 1
+    r2 = eng.submit(rng.randint(0, cfg.vocab_size, (8,)), arrival=0.1,
+                    max_new_tokens=2)
+    eng.step(now=0.1)                # decode r1 AND prefill r2 in one step
+    assert calls["prefill"] == 2 and calls["decode"] == 1
+    assert eng.active() == 2
+    results = eng.run()
+    assert sorted(r.rid for r in results) == [r1, r2]
+    assert {r.rid: r.n_generated for r in results} == {r1: 3, r2: 2}
+
+
+def test_engine_mixed_score_and_generation_batch():
+    """Score-only and generating requests admitted in the same step run as
+    separate forwards: the score-only row completes via serve_batch (no
+    cache allocated for it), the generating row prefills with a cache
+    sized only to ITS prompt + budget."""
+    cfg, server = _smoke_server(capacity_factor=16.0)
+    calls = _counting_server(server)
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=64))
+    rng = np.random.RandomState(26)
+    rg = eng.submit(rng.randint(0, cfg.vocab_size, (8,)), arrival=0.0,
+                    max_new_tokens=2)
+    rs = eng.submit(rng.randint(0, cfg.vocab_size, (12,)), arrival=0.0)
+    done = eng.step(now=0.0)
+    assert calls["serve"] == 1 and calls["prefill"] == 1
+    assert [r.rid for r in done] == [rs]              # score-only finishes
+    assert done[0].tokens is None
+    results = eng.run()
+    assert results[0].rid == rg and results[0].n_generated == 2
+
+
+def test_engine_state_cache_never_evicts_active_requests():
+    """state_cache overflow must not drop the path state of a request that
+    is still mid-decode (satellite guard)."""
+    cfg, server = _smoke_server(capacity_factor=16.0)
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=64,
+                                             state_cache=2))
+    rng = np.random.RandomState(24)
+    ra = eng.submit(rng.randint(0, cfg.vocab_size, (6,)), arrival=0.0,
+                    max_new_tokens=8)
+    eng.step(now=0.0)                                 # ra enters decode
+    assert eng.active() == 1
+    for i in range(4):                # churn completed states past the cap
+        eng.submit(rng.randint(0, cfg.vocab_size, (6,)), arrival=0.1 + i)
+        eng.step(now=0.1 + i)
+    assert len(eng._path_states) <= 2 + 1             # cap + pinned active
+    assert ra in eng._path_states                     # pinned, not evicted
+    assert eng.request_path_state(ra) is not None
+    results = eng.run()                               # ra finishes cleanly
+    assert any(r.rid == ra and r.n_generated == 8 for r in results)
+
+
+def test_engine_backpressure_bounds_active_slots():
+    """Prefill admission is gated on free decode slots, so the in-flight
+    KV working set never exceeds max_batch_requests; every request still
+    completes (FCFS, no starvation)."""
+    cfg, server = _smoke_server(capacity_factor=16.0)
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=64,
+                                             max_batch_requests=2))
+    rng = np.random.RandomState(27)
+    rids = [eng.submit(rng.randint(0, cfg.vocab_size, (6,)), arrival=0.0,
+                       max_new_tokens=4) for _ in range(5)]
+    results = []
+    for _ in range(100):
+        results.extend(eng.step(now=0.0))
+        assert eng.active() <= 2
+        if not eng.has_work():
+            break
+    assert sorted(r.rid for r in results) == rids
+    assert all(r.n_generated == 4 for r in results)
+
+
+def test_engine_simulate_generates_and_reports_tpot():
+    cfg, server = _smoke_server(capacity_factor=16.0)
+    rng = np.random.RandomState(25)
+    trace = [(rng.randint(0, cfg.vocab_size, (8,)), 0.01 * i)
+             for i in range(4)]
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=32))
+    results = simulate(eng, trace, max_new_tokens=3)
+    assert len(results) == 4
+    for r in results:
+        assert r.n_generated == 3
+        assert r.arrival <= r.ttft <= r.completion
+        assert r.tpot is not None and r.tpot >= 0
+    assert not eng.has_work()
 
 
 def test_engine_simulate_open_loop_latency():
