@@ -18,6 +18,9 @@ import time
 # Tables without an entry take no size kwargs (the train-side tables are
 # already smoke-scale); --smoke prints a note when it runs one unreduced.
 SMOKE_KWARGS = {
+    "schedules": dict(device_count=2, steps=2, batch=2, seq=16,
+                      microbatches=2,
+                      schedules=("baseline", "priority+partition+pipeline")),
     "fig16": dict(batches=2, seq=32),
     "table5": dict(batches=2, seq=32),
     "fig19": dict(batches=2, seq=32),
@@ -34,6 +37,7 @@ def all_benchmarks():
         ("fig14", train_side.fig14_design_ablation),
         ("fig15", train_side.fig15_partition_size),
         ("table3", train_side.table3_packing),
+        ("schedules", train_side.measured_schedule_ablation),
         ("fig16", infer_side.fig16_inference_time),
         ("table5", infer_side.table5_path_length),
         ("fig19", infer_side.fig19_estimation_accuracy),

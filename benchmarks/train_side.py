@@ -1,12 +1,23 @@
-"""Training-side benchmarks: Table 1, Figs. 10-15, Table 3.
+"""Training-side benchmarks: Table 1, Figs. 10-15, Table 3, and the
+MEASURED schedule ablation (``schedules``).
 
 Each function returns rows of (name, us_per_call, derived).  ``us_per_call``
 is a real CPU wall-time of the corresponding smoke-scale jitted step (the
 anchor proving the code path runs); ``derived`` carries the v5e-modelled
 quantity the paper table reports.
+
+``measured_schedule_ablation`` is different in kind: it runs every Lina §4
+gradient-reduction schedule through the REAL jitted train step on a forced
+multi-device CPU mesh (``XLA_FLAGS=--xla_force_host_platform_device_count``,
+in a subprocess so the parent's jax stays single-device per the dry-run
+rules) and reports measured wall time next to the analytic
+``simulate_step`` number for the same schedule.
 """
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -123,6 +134,142 @@ def fig15_partition_size():
     return rows
 
 
+# ---------------------------------------------------------------------------
+# measured (not simulated) schedule ablation
+# ---------------------------------------------------------------------------
+
+MEASURED_SCHEDULES = ("baseline", "priority", "priority+partition",
+                      "priority+partition+pipeline")
+
+
+# The ablation times the SMOKE config (~1MB of gradients), so the paper-
+# scale 30MB default would collapse every partitioned schedule to a single
+# chunk; 256KB yields a real multi-chunk reduce at this scale.
+MEASURED_PARTITION_BYTES = 256e3
+
+
+def _measure_schedules_inprocess(schedules, steps, batch, seq, microbatches,
+                                 partition_bytes=MEASURED_PARTITION_BYTES,
+                                 grad_compression=None):
+    """Worker body: time each schedule's jitted train step on THIS process's
+    device set (the parent forces the device count via XLA_FLAGS)."""
+    from repro.launch.mesh import mesh_context
+    from repro.optim import reduce as reduce_mod
+
+    n = jax.device_count()
+    # dp first (the reduce under test runs over dp); ep>1 only when there
+    # are enough devices for both axes (n>=4 -> a2a AND reduce contend)
+    ep = 2 if n % 2 == 0 and n >= 4 else 1
+    dp = max(n // ep, 1)
+    mesh = jax.make_mesh((dp, ep), ("data", "model"))
+    cfg = GPT2_MOE.smoke()
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                    global_batch=batch)
+    params = lm_mod.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig()
+    opt0 = init_opt_state(params, opt_cfg)
+    data = {k: jnp.asarray(v) for k, v in SyntheticLM(dc).batch(0).items()}
+    # grads are params-shaped: report the micro-op count each schedule
+    # actually compiled (non-partitioned schedules run one fused reduce)
+    part_chunks = reduce_mod.n_chunks_for_bytes(params, partition_bytes)
+    out = []
+    for sched in schedules:
+        n_chunks = part_chunks if "partition" in sched else 1
+        step = jax.jit(make_train_step(
+            cfg, mesh, opt_cfg, fsdp=False, microbatches=microbatches,
+            schedule=sched, partition_bytes=partition_bytes,
+            grad_compression=grad_compression))
+        rstate = None
+        if grad_compression == "int8_ef":
+            rstate = reduce_mod.init_reduce_state(
+                params, reduce_mod.ReduceConfig(sched,
+                                                compression=grad_compression))
+        args = (params, opt0, data) + ((rstate,) if rstate is not None else ())
+        with mesh_context(mesh):
+            r = step(*args)                        # compile + warm caches
+            p, o = r[0], r[1]
+            jax.block_until_ready(o.step)
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                r = step(p, o, data, *r[3:])
+                p, o = r[0], r[1]
+            jax.block_until_ready(o.step)
+        us = (time.perf_counter() - t0) / steps * 1e6
+        out.append((sched, us, dp, ep, n_chunks))
+    return out
+
+
+def measured_schedule_ablation(device_count: int = 4, steps: int = 5,
+                               batch: int = 4, seq: int = 32,
+                               microbatches: int = 2,
+                               schedules=MEASURED_SCHEDULES,
+                               partition_bytes: float = MEASURED_PARTITION_BYTES,
+                               grad_compression=None):
+    """Measured wall time of each gradient-reduction schedule through the
+    real jitted train step on a ``device_count``-device CPU mesh, with the
+    analytic paper-hardware step time for the same schedule alongside."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count"
+                        f"={device_count}").strip()
+    env["PYTHONPATH"] = os.pathsep.join([os.path.join(repo, "src"), repo])
+    cmd = [sys.executable, "-m", "benchmarks.train_side",
+           "--schedules", ",".join(schedules), "--steps", str(steps),
+           "--batch", str(batch), "--seq", str(seq),
+           "--microbatches", str(microbatches),
+           "--partition-bytes", str(partition_bytes)]
+    if grad_compression:
+        cmd += ["--grad-compression", grad_compression]
+    p = subprocess.run(cmd, env=env, cwd=repo, capture_output=True,
+                       text=True, timeout=1800)
+    if p.returncode != 0:
+        raise RuntimeError(f"measure worker failed:\n{p.stderr[-3000:]}")
+    measured = {}
+    notes = {}
+    for line in p.stdout.splitlines():
+        if line.startswith("MEASURED "):
+            _, sched, us, dp, ep, nchunks = line.split()
+            measured[sched] = float(us)
+            notes[sched] = f"mesh={dp}x{ep},n_chunks={nchunks}"
+    sim = step_model_for(with_experts(GPT2_MOE, 16), SEQ, BATCH,
+                         n_devices=16, hw=A100_IB)
+    rows = []
+    comp_note = f",compression={grad_compression}" if grad_compression else ""
+    for sched in schedules:
+        sim_ms = simulate_step(sim, sched)["step_time"] * 1e3
+        rows.append((f"schedules/measured/gpt2-{sched}", measured[sched],
+                     f"{notes[sched]},microbatches={microbatches}{comp_note},"
+                     f"sim_paperhw_step_ms={sim_ms:.3f}"))
+    if "baseline" in measured and "priority+partition+pipeline" in measured:
+        base = measured["baseline"]
+        lina = measured["priority+partition+pipeline"]
+        rows.append(("schedules/measured/speedup", 0.0,
+                     f"baseline_us={base:.0f},lina_us={lina:.0f},"
+                     f"measured_speedup={base / max(lina, 1e-9):.3f}"))
+    return rows
+
+
+def _worker_main(argv=None):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedules", required=True)
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--partition-bytes", type=float,
+                    default=MEASURED_PARTITION_BYTES)
+    ap.add_argument("--grad-compression", default=None)
+    args = ap.parse_args(argv)
+    rows = _measure_schedules_inprocess(
+        args.schedules.split(","), args.steps, args.batch, args.seq,
+        args.microbatches, partition_bytes=args.partition_bytes,
+        grad_compression=args.grad_compression)
+    for sched, us, dp, ep, n_chunks in rows:
+        print(f"MEASURED {sched} {us:.1f} {dp} {ep} {n_chunks}", flush=True)
+
+
 def table3_packing():
     """Table 3: pipeline efficiency without / with expert packing."""
     rows = []
@@ -141,3 +288,7 @@ def table3_packing():
                          f"eff_packed={packed.pipeline_efficiency:.2f},"
                          f"experts_per_device={packed.experts_per_device}"))
     return rows
+
+
+if __name__ == "__main__":
+    _worker_main()

@@ -48,6 +48,10 @@ class MoEOutput(NamedTuple):
     aux_loss: jax.Array      # scalar
     expert_idx: jax.Array    # [T, k] — for popularity profiling/estimation
     router_probs: jax.Array  # [T, E]
+    a2a_token: jax.Array     # zero scalar data-dependent on the layer's a2a
+    #                          micro-ops — the ordering signal Lina's
+    #                          prioritized gradient reduce yields to
+    #                          (optim/reduce.py); threaded, never dropped
 
 
 def init_moe_params(key, d_model: int, d_ff: int, n_experts: int,
@@ -170,19 +174,19 @@ def moe_layer(mesh, x, params: MoEParams, cfg: MoEConfig, *,
 
     def wrapped(x, router, wi, wu, wo):
         wu_ = wu if has_wu else None
-        y, aux, eidx, probs, _ = body(x, router, wi, wu_, wo)
+        y, aux, eidx, probs, tok = body(x, router, wi, wu_, wo)
         # aux loss: tokens differ across every sharded axis -> mean over them
         if aux_axes:
             aux = lax.pmean(aux, aux_axes)
-        return y, aux, eidx, probs
+        return y, aux, eidx, probs, tok
 
     # token-flat outputs (expert ids / probs) keep the (b, s)-derived shard
     flat_axes = (tuple(bq) if bq else ()) + ((sq,) if sq else ())
     flat_spec = P(flat_axes or None, None)
-    y, aux, eidx, probs = shard_map(
+    y, aux, eidx, probs, tok = shard_map(
         wrapped, mesh=mesh,
         in_specs=(bspec, P(None, None), wspec_i, wu_spec, wspec_o),
-        out_specs=(bspec, P(), flat_spec, flat_spec),
+        out_specs=(bspec, P(), flat_spec, flat_spec, P()),
         check_rep=False,
     )(x, params.router, params.wi, wu, params.wo)
-    return MoEOutput(y, aux, eidx, probs)
+    return MoEOutput(y, aux, eidx, probs, tok)

@@ -19,6 +19,7 @@ from repro.core.placement import identity_plan
 from repro.models import lm as lm_mod
 from repro.models.lm import LMCache, LMParams, FRAME_DIM
 from repro.optim.adamw import AdamWConfig, OptState, adamw_update, init_opt_state
+from repro.optim import reduce as reduce_mod
 
 SERVE_DTYPE = jnp.bfloat16
 
@@ -89,15 +90,45 @@ def input_specs(cfg: ModelConfig, shape: ShapeConfig, opt_cfg=None) -> dict:
 def make_train_step(cfg: ModelConfig, mesh, opt_cfg: Optional[AdamWConfig] = None,
                     *, lina: bool = True, fsdp: bool = True,
                     dispatch_backend: str = "scatter",
-                    microbatches: int = 1):
+                    microbatches: int = 1,
+                    schedule: Optional[str] = None,
+                    partition_bytes: float = reduce_mod.DEFAULT_PARTITION_BYTES,
+                    grad_compression: Optional[str] = None):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
     ``microbatches > 1`` scans gradient accumulation over batch slices —
     the standard activation-memory lever (and the granularity at which
-    Lina's chunked DP reduction can overlap the next microbatch's compute;
-    see core/microop.py).
+    Lina's chunked DP reduction overlaps the next microbatch's compute).
+
+    ``schedule`` selects Lina's §4 gradient-reduction schedule
+    (``optim.reduce.SCHEDULES``): the DP-axis reduce becomes an explicit
+    chunked psum (``core.microop.prioritized_chunked_reduce``, entered via
+    ``optim.reduce.reduce_gradients``'s shard_map) ordered after the
+    backward-a2a completion token that
+    ``core.moe`` threads out of the shard_map body and ``models.lm``
+    carries to the step as ``ModelOutput.a2a_marker``.  ``None`` keeps the
+    legacy implicit reduction (whatever XLA's partitioner emits).  With
+    ``priority+partition+pipeline`` and ``microbatches > 1`` the chunked
+    reduce of each microbatch is interleaved with the next microbatch's
+    gradient compute inside an unrolled ``lax.scan``.
+
+    ``grad_compression`` (``"bf16"`` | ``"int8_ef"``) wraps the chunked
+    reduce; int8 error feedback is stateful, which changes the signature to
+    (params, opt_state, batch, reduce_state) ->
+    (params, opt_state, metrics, reduce_state).
     """
     opt_cfg = opt_cfg or AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    if grad_compression is not None and schedule is None:
+        raise ValueError("grad_compression requires an explicit schedule "
+                         f"(one of {reduce_mod.SCHEDULES})")
+    rcfg = None
+    if schedule is not None:
+        rcfg = reduce_mod.ReduceConfig(schedule=schedule,
+                                       partition_bytes=partition_bytes,
+                                       compression=grad_compression)
+    stateful = grad_compression == "int8_ef"
+    pipelined = (rcfg is not None and microbatches > 1 and
+                 schedule == "priority+partition+pipeline")
 
     def loss_fn(params, batch):
         out = lm_mod.forward_train(mesh, cfg, params, batch, lina=lina,
@@ -105,32 +136,77 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: Optional[AdamWConfig] = Non
                                    fsdp=fsdp)
         return out.loss, out
 
-    def train_step(params, opt_state, batch):
+    def explicit_reduce(grads, marker, rstate):
+        # order the reduce micro-ops after the backward a2a: expert-weight
+        # grad leaves are computed from tokens received over it, and the
+        # forward marker pins the forward a2a micro-ops too
+        after = reduce_mod.backward_a2a_token(grads, marker)
+        return reduce_mod.reduce_gradients(mesh, grads, rcfg,
+                                           after=after, state=rstate)
+
+    def grads_of(params, batch, rstate):
+        """Returns (grads, loss, aux, rstate) with grads already reduced
+        when an explicit schedule is configured."""
         if microbatches <= 1:
             (loss, out), grads = jax.value_and_grad(loss_fn, has_aux=True)(
                 params, batch)
-            aux = out.aux_loss
-        else:
-            mb = {k: v.reshape(microbatches, v.shape[0] // microbatches,
-                               *v.shape[1:]) for k, v in batch.items()}
+            if rcfg is not None:
+                grads, rstate = explicit_reduce(grads, out.a2a_marker, rstate)
+            return grads, loss, out.aux_loss, rstate
 
+        mb = {k: v.reshape(microbatches, v.shape[0] // microbatches,
+                           *v.shape[1:]) for k, v in batch.items()}
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        z = jnp.zeros(())
+
+        if pipelined:
             def acc_step(carry, mbatch):
-                g_acc, l_acc, a_acc = carry
+                g_acc, l_acc, a_acc, rs = carry
+                (l, out), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mbatch)
+                # reduce THIS microbatch's chunks now; unrolled, so XLA's
+                # async-collective scheduler overlaps them with the next
+                # microbatch's backward compute (psum is linear: per-
+                # microbatch mean-reduction sums to the full-batch one)
+                g, rs = explicit_reduce(g, out.a2a_marker, rs)
+                g_acc = jax.tree.map(lambda a, b_: a + b_, g_acc, g)
+                return (g_acc, l_acc + l, a_acc + out.aux_loss, rs), None
+
+            (grads, loss, aux, rstate), _ = jax.lax.scan(
+                acc_step, (zeros, z, z, rstate), mb, unroll=microbatches)
+        else:
+            def acc_step(carry, mbatch):
+                g_acc, l_acc, a_acc, m_acc = carry
                 (l, out), g = jax.value_and_grad(loss_fn, has_aux=True)(
                     params, mbatch)
                 g_acc = jax.tree.map(lambda a, b_: a + b_, g_acc, g)
-                return (g_acc, l_acc + l, a_acc + out.aux_loss), None
+                return (g_acc, l_acc + l, a_acc + out.aux_loss,
+                        m_acc + out.a2a_marker), None
 
-            zeros = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            (grads, loss, aux), _ = jax.lax.scan(
-                acc_step, (zeros, jnp.zeros(()), jnp.zeros(())), mb)
-            grads = jax.tree.map(lambda g: g / microbatches, grads)
-            loss = loss / microbatches
-            aux = aux / microbatches
+            (grads, loss, aux, marker), _ = jax.lax.scan(
+                acc_step, (zeros, z, z, jnp.zeros((), jnp.float32)), mb)
+            if rcfg is not None:
+                grads, rstate = explicit_reduce(grads, marker, rstate)
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        return grads, loss / microbatches, aux / microbatches, rstate
+
+    def finish(params, opt_state, grads, loss, aux):
         params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
         metrics = {"loss": loss, "aux_loss": aux, **om}
         return params, opt_state, metrics
+
+    if stateful:
+        def train_step(params, opt_state, batch, reduce_state):
+            grads, loss, aux, reduce_state = grads_of(params, batch,
+                                                      reduce_state)
+            params, opt_state, metrics = finish(params, opt_state, grads,
+                                                loss, aux)
+            return params, opt_state, metrics, reduce_state
+    else:
+        def train_step(params, opt_state, batch):
+            grads, loss, aux, _ = grads_of(params, batch, None)
+            return finish(params, opt_state, grads, loss, aux)
 
     return train_step
 

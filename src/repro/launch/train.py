@@ -15,6 +15,7 @@ import json
 from repro.configs import get_config
 from repro.data import DataConfig
 from repro.optim.adamw import AdamWConfig
+from repro.optim.reduce import DEFAULT_PARTITION_BYTES
 from repro.runtime import Trainer, TrainerConfig
 
 
@@ -27,6 +28,23 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--no-lina", action="store_true")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--schedule", default="implicit",
+                    help="gradient-reduction schedule (optim.reduce."
+                         "SCHEDULES); the default 'implicit' keeps XLA's "
+                         "own DP reduction (explicit schedules add one "
+                         "extra collective per step — use for the "
+                         "ablation or with --grad-compression)")
+    ap.add_argument("--partition-bytes", type=float,
+                    default=DEFAULT_PARTITION_BYTES,
+                    help="micro-op size for the partitioned schedules")
+    ap.add_argument("--grad-compression", default=None,
+                    choices=["bf16", "int8_ef"],
+                    help="compress the DP reduce (bf16 cast or int8 with "
+                         "error feedback)")
+    ap.add_argument("--mesh", default=None,
+                    help="data x model mesh, e.g. 2x4 (needs that many "
+                         "devices; on CPU force them with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
@@ -41,8 +59,17 @@ def main(argv=None):
                           state_dtype=cfg.opt_state_dtype)
     tcfg = TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
                          ckpt_every=args.ckpt_every, lina=not args.no_lina,
-                         microbatches=args.microbatches, seed=args.seed)
-    trainer = Trainer(cfg, data_cfg, opt_cfg, tcfg)
+                         microbatches=args.microbatches, seed=args.seed,
+                         schedule=None if args.schedule == "implicit"
+                         else args.schedule,
+                         partition_bytes=args.partition_bytes,
+                         grad_compression=args.grad_compression)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_mesh
+        dp_n, ep_n = (int(x) for x in args.mesh.split("x"))
+        mesh = make_mesh((dp_n, ep_n), ("data", "model"))
+    trainer = Trainer(cfg, data_cfg, opt_cfg, tcfg, mesh=mesh)
 
     def log(step, m):
         if step % tcfg.log_every == 0:

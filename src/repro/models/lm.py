@@ -89,6 +89,9 @@ class ModelOutput(NamedTuple):
     aux_loss: jax.Array
     expert_choices: Optional[jax.Array]   # [n_moe_layers, T] top-1
     cache: Optional[LMCache]
+    a2a_marker: Optional[jax.Array] = None  # zero scalar data-dependent on
+    #                                         every MoE layer's a2a micro-ops
+    #                                         (Lina's reduce-ordering signal)
 
 
 # ---------------------------------------------------------------------------
@@ -198,9 +201,11 @@ def _tree_idx(tree, i):
 
 def _group_apply(mesh, cfg, gp: GroupParams, x, *, lina, serve_plan=None,
                  serve_top_k=None, dispatch_backend="scatter", fsdp=False):
-    """Apply one layer group on [B, S, d].  Returns (x, aux, top1_experts)."""
+    """Apply one layer group on [B, S, d].
+    Returns (x, aux, top1_experts, a2a_token)."""
     every = cfg.moe.every if cfg.moe.enabled else 1
     aux = jnp.zeros((), jnp.float32)
+    tok = jnp.zeros((), jnp.float32)
     top1 = None
     b, s, d = x.shape
     for j in range(every):
@@ -231,13 +236,14 @@ def _group_apply(mesh, cfg, gp: GroupParams, x, *, lina, serve_plan=None,
                                 dispatch_backend=dispatch_backend,
                                 lina=lina, fsdp=fsdp)
                 moe_y, a, eidx = out.y, out.aux_loss, out.expert_idx
+                tok = tok + out.a2a_token
             if gp.shared is not None:
                 moe_y = moe_y + _ffn_apply(gp.shared, h, cfg.ffn_type,
                                            mesh, cfg.tensor_parallel)
             x = x + moe_y
             aux = aux + a
             top1 = eidx[:, 0]
-    return x, aux, top1
+    return x, aux, top1, tok
 
 
 # ---------------------------------------------------------------------------
@@ -311,7 +317,8 @@ def chunked_ce_loss(mesh, x, w_unembed, labels, loss_mask, chunk=CE_CHUNK):
 
 def _run_stack(mesh, cfg, params: LMParams, x, *, lina=True, serve_plan=None,
                serve_top_k=None, dispatch_backend="scatter", fsdp=False):
-    """Full-sequence stack application.  Returns (x, aux, expert_choices)."""
+    """Full-sequence stack application.
+    Returns (x, aux, expert_choices, a2a_marker)."""
     dp = dp_axes(mesh)
     x = constrain(x, mesh, P(dp, None, None))
     if isinstance(params.stack, HybridParams):
@@ -326,24 +333,24 @@ def _run_stack(mesh, cfg, params: LMParams, x, *, lina=True, serve_plan=None,
             # Megatron-SP: the carry (and everything outside attention) lives
             # sequence-sharded over `model`; XLA gathers around attention.
             x = constrain(x, mesh, P(dp, tp_axes(mesh), None))
-        x, aux, top1 = _group_apply(mesh, cfg, gp, x, lina=lina,
-                                    serve_plan=serve_plan,
-                                    serve_top_k=serve_top_k,
-                                    dispatch_backend=dispatch_backend,
-                                    fsdp=fsdp)
+        x, aux, top1, tok = _group_apply(mesh, cfg, gp, x, lina=lina,
+                                         serve_plan=serve_plan,
+                                         serve_top_k=serve_top_k,
+                                         dispatch_backend=dispatch_backend,
+                                         fsdp=fsdp)
         if top1 is None:
             top1 = jnp.zeros((x.shape[0] * x.shape[1],), jnp.int32)
-        return x, (aux, top1)
+        return x, (aux, top1, tok)
 
     if cfg.remat:
         # save only the layer boundaries; recompute everything inside the
         # block in backward (activation memory = O(layers * hidden), the
         # standard full-remat policy for big-model training)
         body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
-    x, (auxs, top1s) = jax.lax.scan(body, x, gp_stack)
+    x, (auxs, top1s, toks) = jax.lax.scan(body, x, gp_stack)
     aux = auxs.sum()
     experts = top1s if cfg.moe.enabled else None
-    return x, aux, experts
+    return x, aux, experts, toks.sum()
 
 
 def _run_hybrid(mesh, cfg, hp: HybridParams, x):
@@ -368,7 +375,7 @@ def _run_hybrid(mesh, cfg, hp: HybridParams, x):
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
     x, _ = jax.lax.scan(body_fn, x, (hp.mamba, hp.ln_m, taps))
-    return x, jnp.zeros(()), None
+    return x, jnp.zeros(()), None, jnp.zeros((), jnp.float32)
 
 
 def _run_rwkv(mesh, cfg, st: RWKVStack, x):
@@ -383,7 +390,7 @@ def _run_rwkv(mesh, cfg, st: RWKVStack, x):
 
     body_fn = jax.checkpoint(body) if cfg.remat else body
     x, _ = jax.lax.scan(body_fn, x, (st.blocks, st.ln1, st.ln2))
-    return x, jnp.zeros(()), None
+    return x, jnp.zeros(()), None, jnp.zeros((), jnp.float32)
 
 
 def forward_train(mesh, cfg, params: LMParams, batch: dict, *, lina=True,
@@ -413,12 +420,13 @@ def forward_train(mesh, cfg, params: LMParams, batch: dict, *, lina=True,
         labels = batch["labels"]
         loss_mask = jnp.ones_like(labels, jnp.float32)
 
-    x, aux, experts = _run_stack(mesh, cfg, params, x, lina=lina,
-                                 dispatch_backend=dispatch_backend, fsdp=fsdp)
+    x, aux, experts, marker = _run_stack(mesh, cfg, params, x, lina=lina,
+                                         dispatch_backend=dispatch_backend,
+                                         fsdp=fsdp)
     x = rms_norm(x, params.final_norm, cfg.norm_eps)
     loss = chunked_ce_loss(mesh, x, unembed_weight(params), labels, loss_mask)
     total = loss + cfg.moe.aux_loss_weight * 0 + aux  # aux already weighted
-    return ModelOutput(total, None, aux, experts, None)
+    return ModelOutput(total, None, aux, experts, None, marker)
 
 
 def forward_prefill(mesh, cfg, params: LMParams, batch: dict, *, lina=False,
@@ -436,13 +444,13 @@ def forward_prefill(mesh, cfg, params: LMParams, batch: dict, *, lina=False,
                          patches=batch["patches"])
     else:
         x = embed_inputs(cfg, params, tokens=batch["tokens"])
-    x, aux, experts = _run_stack(mesh, cfg, params, x, lina=lina,
-                                 serve_plan=serve_plan, serve_top_k=serve_top_k,
-                                 fsdp=fsdp)
+    x, aux, experts, marker = _run_stack(mesh, cfg, params, x, lina=lina,
+                                         serve_plan=serve_plan,
+                                         serve_top_k=serve_top_k, fsdp=fsdp)
     x = rms_norm(x, params.final_norm, cfg.norm_eps)
     last = x[:, -1]
     logits = last @ unembed_weight(params)
-    return ModelOutput(None, logits, aux, experts, None)
+    return ModelOutput(None, logits, aux, experts, None, marker)
 
 
 # -- decode ------------------------------------------------------------------

@@ -1,9 +1,13 @@
 """Gradient compression for the DP reduction (cross-pod links are the
 scarcest resource at 1000+ nodes): bf16 cast and int8 with error feedback.
 
-Used by the Trainer's `grad_compression` option; the compressed reduce is a
-drop-in around ``prioritized_chunked_reduce`` so Lina's a2a-priority ordering
-is preserved.
+Consumed by ``optim.reduce`` (``ReduceConfig.compression``), which wraps
+the compressed payload around ``prioritized_chunked_reduce`` so Lina's
+a2a-priority ordering is preserved, and surfaced as
+``TrainerConfig.grad_compression`` / ``make_train_step(grad_compression=)``.
+The int8 error-feedback residual (``Int8State``) is carried across steps as
+the trainer's ``reduce_state`` and rides in checkpoints, so resume stays
+bitwise.
 """
 from __future__ import annotations
 

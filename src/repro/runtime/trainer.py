@@ -26,8 +26,10 @@ from repro.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig
 from repro.core.packing import choose_packing
 from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import ep_size
 from repro.launch.steps import make_train_step
 from repro.models import lm as lm_mod
+from repro.optim import reduce as reduce_mod
 from repro.optim.adamw import AdamWConfig, init_opt_state
 
 
@@ -40,6 +42,16 @@ class TrainerConfig:
     log_every: int = 10
     lina: bool = True
     microbatches: int = 1
+    # Lina §4 gradient-reduction schedule (optim/reduce.py).  "baseline" is
+    # an explicit single fused psum; the priority* schedules order/partition
+    # it after the backward a2a.  Default None keeps the implicit XLA
+    # reduction: the explicit reduce runs ON TOP of the partitioner's own
+    # DP reduction (one extra param-sized collective per step), so it is
+    # opt-in — for the measured ablation, schedule experiments, and
+    # compression — not the steady-state default.
+    schedule: Optional[str] = None
+    partition_bytes: float = reduce_mod.DEFAULT_PARTITION_BYTES
+    grad_compression: Optional[str] = None   # None | "bf16" | "int8_ef"
     fail_at_step: Optional[int] = None       # failure injection (tests)
     straggler_factor: float = 3.0
     pack_warmup: int = 10                    # paper: packing decided at step 10
@@ -56,9 +68,12 @@ class Trainer:
         self.mesh = mesh
         self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
         self.dataset = SyntheticLM(data_cfg)
+        self.stateful_reduce = cfg.grad_compression == "int8_ef"
         self.step_fn = jax.jit(make_train_step(
             model_cfg, mesh, opt_cfg, lina=cfg.lina,
-            microbatches=cfg.microbatches, fsdp=False))
+            microbatches=cfg.microbatches, fsdp=False,
+            schedule=cfg.schedule, partition_bytes=cfg.partition_bytes,
+            grad_compression=cfg.grad_compression))
         self.metrics_log: list = []
         self.straggler_events: list = []
         self.packing_decision = None
@@ -66,8 +81,16 @@ class Trainer:
     def init_state(self):
         params = lm_mod.init_params(self.model_cfg,
                                     jax.random.PRNGKey(self.cfg.seed))
-        return {"params": params,
-                "opt_state": init_opt_state(params, self.opt_cfg)}
+        state = {"params": params,
+                 "opt_state": init_opt_state(params, self.opt_cfg)}
+        if self.stateful_reduce:
+            # int8-EF residual rides in the checkpoint so resume is bitwise
+            state["reduce_state"] = reduce_mod.init_reduce_state(
+                params, reduce_mod.ReduceConfig(
+                    schedule=self.cfg.schedule,
+                    partition_bytes=self.cfg.partition_bytes,
+                    compression=self.cfg.grad_compression))
+        return state
 
     def run(self, on_step: Optional[Callable] = None) -> dict:
         state = self.init_state()
@@ -85,17 +108,27 @@ class Trainer:
             batch = {k: jax.numpy.asarray(v)
                      for k, v in self.dataset.batch(step).items()}
             t0 = time.perf_counter()
-            params, opt_state, m = self.step_fn(state["params"],
-                                                state["opt_state"], batch)
+            if self.stateful_reduce:
+                params, opt_state, m, rstate = self.step_fn(
+                    state["params"], state["opt_state"], batch,
+                    state["reduce_state"])
+            else:
+                params, opt_state, m = self.step_fn(state["params"],
+                                                    state["opt_state"], batch)
             m = {k: float(v) for k, v in m.items()}
             dt = time.perf_counter() - t0
             state = {"params": params, "opt_state": opt_state}
+            if self.stateful_reduce:
+                state["reduce_state"] = rstate
             times.append(dt)
             med = float(np.median(times[-20:]))
             if len(times) > 5 and dt > self.cfg.straggler_factor * med:
                 self.straggler_events.append({"step": step, "dt": dt,
                                               "median": med})
-            self.metrics_log.append({"step": step, **m, "dt": dt})
+            # per-schedule step time: the measured ablation keys on this
+            self.metrics_log.append({"step": step, **m, "dt": dt,
+                                     "schedule": self.cfg.schedule or
+                                     "implicit"})
             if step == self.cfg.pack_warmup and self.model_cfg.moe.enabled:
                 self._decide_packing()
             if on_step:
@@ -107,9 +140,11 @@ class Trainer:
 
     def _decide_packing(self):
         mc = self.model_cfg
-        ep = mc.moe.n_experts  # paper setting: one expert per device
+        # EP group size from the actual mesh; the paper's one-expert-per-
+        # device assumption only stands in when there is no mesh to ask
+        ep = ep_size(self.mesh) if self.mesh is not None else mc.moe.n_experts
         tokens = (self.data_cfg.global_batch * self.data_cfg.seq_len
-                  // max(mc.moe.n_experts, 1) // max(mc.moe.n_microops, 1))
+                  // max(ep, 1) // max(mc.moe.n_microops, 1))
         self.packing_decision = choose_packing(
             max(tokens, 1), mc.d_model, mc.moe.d_ff or mc.d_ff,
             mc.moe.n_experts, ep,

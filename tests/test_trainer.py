@@ -13,14 +13,16 @@ from repro.runtime import Trainer, TrainerConfig
 
 
 def make_trainer(tmp_path, steps=10, fail_at=None, lina=True, seed=0,
-                 arch="gpt2-moe", microbatches=1):
+                 arch="gpt2-moe", microbatches=1, schedule=None,
+                 grad_compression=None):
     cfg = get_config(arch).smoke()
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4,
                       seed=seed)
     ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
     tcfg = TrainerConfig(steps=steps, ckpt_dir=str(tmp_path), ckpt_every=5,
                          lina=lina, fail_at_step=fail_at, seed=seed,
-                         microbatches=microbatches, pack_warmup=3)
+                         microbatches=microbatches, pack_warmup=3,
+                         schedule=schedule, grad_compression=grad_compression)
     return Trainer(cfg, dcfg, ocfg, tcfg)
 
 
@@ -47,6 +49,34 @@ def test_checkpoint_restart_bitwise(tmp_path):
 
     for a, b in zip(_leaves(s_state), _leaves(r_state)):
         np.testing.assert_array_equal(a, b)
+
+
+def test_checkpoint_restart_bitwise_schedule_microbatch(tmp_path):
+    """Bitwise resume must also hold off the default path: gradient
+    accumulation (microbatches=2) under the pipelined reduction schedule
+    with stateful int8-EF compression (whose residual rides in the
+    checkpoint)."""
+    kw = dict(steps=10, microbatches=2,
+              schedule="priority+partition+pipeline",
+              grad_compression="int8_ef")
+    straight = make_trainer(tmp_path / "a", **kw)
+    s_state = straight.run()
+    assert "reduce_state" in s_state
+
+    interrupted = make_trainer(tmp_path / "b", fail_at=7, **kw)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        interrupted.run()
+    resumed = make_trainer(tmp_path / "b", **kw)       # restart from ckpt@5
+    r_state = resumed.run()
+
+    for a, b in zip(_leaves(s_state), _leaves(r_state)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_schedule_logged_per_step(tmp_path):
+    tr = make_trainer(tmp_path, steps=3, schedule="priority+partition")
+    tr.run()
+    assert all(m["schedule"] == "priority+partition" for m in tr.metrics_log)
 
 
 def test_lina_matches_baseline_numerics(tmp_path):
@@ -78,6 +108,31 @@ def test_packing_controller_runs(tmp_path):
     tr.run()
     assert tr.packing_decision is not None
     assert tr.packing_decision.experts_per_device >= 1
+
+
+def test_packing_uses_mesh_ep_size(tmp_path):
+    """With a mesh, the packing controller derives the EP group from
+    launch.mesh.ep_size(mesh), not from n_experts (only the mesh-less
+    fallback keeps the paper's one-expert-per-device assumption)."""
+    from repro.core.packing import choose_packing
+    from repro.launch.mesh import ep_size, make_mesh
+
+    cfg = get_config("gpt2-moe").smoke()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=5)
+    tcfg = TrainerConfig(steps=5, ckpt_dir=str(tmp_path), ckpt_every=5,
+                         pack_warmup=3)
+    mesh = make_mesh((1, 1), ("data", "model"))     # ep=1 != n_experts
+    tr = Trainer(cfg, dcfg, ocfg, tcfg, mesh=mesh)
+    tr.run()
+    ep = ep_size(mesh)
+    assert ep != cfg.moe.n_experts                  # the fix is observable
+    tokens = max(dcfg.global_batch * dcfg.seq_len
+                 // max(ep, 1) // max(cfg.moe.n_microops, 1), 1)
+    expected = choose_packing(
+        tokens, cfg.d_model, cfg.moe.d_ff or cfg.d_ff, cfg.moe.n_experts,
+        ep, ffn_mult=3 if cfg.ffn_type == "swiglu" else 2)
+    assert tr.packing_decision == expected
 
 
 def test_straggler_watchdog_structure(tmp_path):
