@@ -1,0 +1,176 @@
+"""Kernel-side benchmark: pallas vs oracle timings for the MoE hot-path
+kernels — fused gating, fused dispatch/combine, grouped expert FFN — across
+the paper model shapes, plus the full MoE layer fwd+bwd on both compute
+backends.
+
+Every row is a REAL wall-time of the jitted op on this host.  On CPU the
+pallas rows run the kernels in interpret mode (Python-per-grid-step), so
+they are a correctness anchor and a baseline for the perf trajectory, not a
+speedup claim — the ``pallas_mode`` field in the JSON says which regime a
+row was measured in.  On a TPU host the same harness emits the native
+numbers this PR's trajectory is meant to be beaten on.
+
+Besides the CSV rows (``benchmarks/run.py --only kernels``), the run emits
+machine-readable ``BENCH_kernels.json`` at the repo root: a list of row
+dicts ``{bench, model, backend, shape, scale, us_per_call, platform,
+pallas_mode}`` that later PRs append to / compare against.  The
+checked-in copy is a FULL run; ``--smoke`` writes to the gitignored
+``BENCH_kernels.smoke.json`` instead (the file CI uploads), so the
+measured-trajectory artifact is never clobbered by CI-sized runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import BERT2GPT2, GPT2_MOE, TRANSFORMER_XL
+from repro.core import dispatch as D
+from repro.core import init_moe_params, moe_layer
+from repro.core.gating import capacity, top_k_gating
+from repro.kernels import ops as K
+
+PAPER_MODELS = {"transformer-xl": TRANSFORMER_XL, "gpt2": GPT2_MOE,
+                "bert2gpt2": BERT2GPT2}
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = os.path.join(REPO_ROOT, "BENCH_kernels.json")
+
+
+def _time_us(fn, *args, iters: int) -> float:
+    fn = jax.jit(fn)
+    jax.block_until_ready(fn(*args))          # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _pallas_mode() -> str:
+    return "native" if K.on_tpu() else "interpret"
+
+
+def kernels_benchmark(models=tuple(PAPER_MODELS), tokens_per_expert: int = 16,
+                      iters: int = 2, scale: int | None = None,
+                      json_path: str = JSON_PATH):
+    """Per paper model: gating / dispatch+combine / grouped-FFN pallas-vs-
+    oracle and a full-layer fwd+bwd xla-vs-pallas.
+
+    ``scale`` divides the model widths.  The default is platform-aware:
+    full width on TPU (kernels compile natively; these are the rows that
+    count), 1/4 width on CPU, where the interpret-mode grouped GEMMs run
+    the kernel body per grid step in Python and full width would take an
+    hour per model.  The chosen widths and scale land in every JSON row.
+    """
+    if scale is None:
+        scale = 1 if K.on_tpu() else 4
+    if not os.path.isabs(json_path):
+        json_path = os.path.join(REPO_ROOT, json_path)
+    rows, jrows = [], []
+
+    def record(bench, model, backend, shape, us, ref_us=None):
+        derived = ",".join(f"{k}={v}" for k, v in shape.items())
+        if ref_us is not None:
+            derived += f",oracle_ratio={us / max(ref_us, 1e-9):.2f}"
+        rows.append((f"kernels/{model}/{bench}/{backend}", us, derived))
+        jrows.append({"bench": bench, "model": model, "backend": backend,
+                      "shape": shape, "scale": scale,
+                      "us_per_call": round(us, 1),
+                      "platform": jax.default_backend(),
+                      "pallas_mode": _pallas_mode()})
+
+    for name in models:
+        cfg = PAPER_MODELS[name]
+        e = cfg.moe.n_experts
+        d = max(128, cfg.d_model // scale)
+        f = max(128, (cfg.moe.d_ff or cfg.d_ff) // scale)
+        k = cfg.moe.top_k
+        t = e * tokens_per_expert
+        key = jax.random.split(jax.random.PRNGKey(0), 6)
+
+        # --- fused gating (router matmul + softmax + top-k) ----------------
+        x = jax.random.normal(key[0], (t, d)) * 0.3
+        router = jax.random.normal(key[1], (d, e)) * (d ** -0.5)
+        shape = {"T": t, "D": d, "E": e, "k": k}
+        ref_us = _time_us(lambda a, b: K.topk_gating_op(a, b, k,
+                                                        use_pallas=False),
+                          x, router, iters=iters)
+        pal_us = _time_us(lambda a, b: K.topk_gating_op(a, b, k,
+                                                        use_pallas=True),
+                          x, router, iters=iters)
+        record("gating", name, "oracle", shape, ref_us)
+        record("gating", name, "pallas", shape, pal_us, ref_us)
+
+        # --- dispatch + combine --------------------------------------------
+        cap = capacity(t, e, k, cfg.moe.capacity_factor)
+        g = top_k_gating(x @ router, k, cap)
+        buf_shape = {"T": t, "E": e, "C": cap, "D": d}
+
+        def roundtrip(backend):
+            disp, comb = D.get_backend(backend)
+
+            def fn(x, g):
+                buf = disp(x, g, e, cap)
+                return comb(buf, g, e, cap)
+            return fn
+
+        ref_us = _time_us(roundtrip("einsum"), x, g, iters=iters)
+        pal_us = _time_us(roundtrip("pallas"), x, g, iters=iters)
+        record("dispatch_combine", name, "oracle", buf_shape, ref_us)
+        record("dispatch_combine", name, "pallas", buf_shape, pal_us, ref_us)
+
+        # --- grouped expert FFN --------------------------------------------
+        xg = jax.random.normal(key[2], (e, tokens_per_expert, d)) * 0.3
+        wi = jax.random.normal(key[3], (e, d, f)) * 0.05
+        wu = jax.random.normal(key[4], (e, d, f)) * 0.05 \
+            if cfg.ffn_type == "swiglu" else None
+        wo = jax.random.normal(key[5], (e, f, d)) * 0.05
+        ffn_shape = {"E": e, "T": tokens_per_expert, "D": d, "F": f,
+                     "ffn": cfg.ffn_type}
+        ref_us = _time_us(
+            lambda a, b, c_, d_: K.grouped_ffn_op(a, b, c_, d_, cfg.ffn_type,
+                                                  use_pallas=False),
+            xg, wi, wu, wo, iters=iters)
+        pal_us = _time_us(
+            lambda a, b, c_, d_: K.grouped_ffn_op(a, b, c_, d_, cfg.ffn_type,
+                                                  use_pallas=True),
+            xg, wi, wu, wo, iters=iters)
+        record("grouped_ffn", name, "oracle", ffn_shape, ref_us)
+        record("grouped_ffn", name, "pallas", ffn_shape, pal_us, ref_us)
+
+        # --- full MoE layer fwd+bwd on both compute backends ---------------
+        layer_shape = {"B": 4, "S": tokens_per_expert * e // 4, "D": d,
+                       "F": f, "E": e, "k": k}
+        params = init_moe_params(jax.random.PRNGKey(1), d, f, e,
+                                 cfg.ffn_type)
+        xl = jax.random.normal(key[0], (4, layer_shape["S"], d)) * 0.3
+
+        def fwdbwd(backend, dispatch_backend):
+            mcfg = dataclasses.replace(cfg.moe, d_ff=f,
+                                       compute_backend=backend)
+
+            def loss(x, p):
+                out = moe_layer(None, x, p, mcfg, ffn_type=cfg.ffn_type,
+                                dispatch_backend=dispatch_backend)
+                return (out.y ** 2).sum() + out.aux_loss
+            return jax.grad(loss, argnums=(0, 1))
+
+        ref_us = _time_us(fwdbwd("xla", "scatter"), xl, params, iters=iters)
+        pal_us = _time_us(fwdbwd("pallas", "pallas"), xl, params,
+                          iters=iters)
+        record("layer_fwdbwd", name, "xla+scatter", layer_shape, ref_us)
+        record("layer_fwdbwd", name, "pallas", layer_shape, pal_us, ref_us)
+
+    with open(json_path, "w") as fh:
+        json.dump(jrows, fh, indent=1)
+    rows.append(("kernels/json", 0.0, json_path))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in kernels_benchmark():
+        print(r)

@@ -26,12 +26,17 @@ SMOKE_KWARGS = {
     "fig19": dict(batches=2, seq=32),
     "traffic": dict(n_requests=6, seq=16, rate_hz=50.0, profile_batches=2,
                     max_new_tokens=4),
+    # smoke rows go to a separate (gitignored) file so CI-sized runs never
+    # clobber the committed full-run BENCH_kernels.json trajectory
+    "kernels": dict(models=("gpt2",), tokens_per_expert=8, iters=1, scale=8,
+                    json_path="BENCH_kernels.smoke.json"),
 }
 
 
 def all_benchmarks():
-    from benchmarks import train_side, infer_side
+    from benchmarks import train_side, infer_side, kernel_side
     return [
+        ("kernels", kernel_side.kernels_benchmark),
         ("table1", train_side.table1_a2a_fraction),
         ("fig10", train_side.fig10_training_speedup),
         ("fig14", train_side.fig14_design_ablation),

@@ -31,6 +31,11 @@ class MoEConfig:
     n_microops: int = 4           # a2a tensor-partition count (micro-ops)
     pipeline_ffn: bool = True     # pipeline expert FFN with a2a micro-ops
     experts_per_device: int = 1   # expert packing degree (power of two)
+    # compute backend for the MoE hot paths (gating / grouped FFN / the
+    # serving slot compute): "pallas" routes through repro.kernels.ops,
+    # "xla" keeps the einsum path, "auto" picks pallas on TPU and xla
+    # elsewhere (kernels.ops.resolve_backend).
+    compute_backend: str = "auto"
 
     @property
     def enabled(self) -> bool:

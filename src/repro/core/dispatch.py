@@ -1,10 +1,17 @@
 """Token dispatch/combine into per-expert capacity buffers.
 
-Two backends with identical semantics:
+Three backends with identical semantics:
   * ``einsum``  — one-hot matmul (GShard reference; O(T*E*C) FLOPs). Oracle.
-  * ``scatter`` — index-based scatter/gather (production; O(T) memory traffic).
+  * ``scatter`` — index-based scatter/gather (production; O(T) memory
+    traffic, but pays a [T*k, d] broadcast copy of the token block on the
+    way in).
+  * ``pallas``  — fused kernels (``kernels/dispatch.py`` via
+    ``kernels.ops.dispatch_combine_op``): a metadata-sized int32 slot
+    inversion plus one single-pass gather kernel per direction — no
+    [T, E, C] one-hot, no broadcast copy.  Differentiable (linear-map
+    custom VJPs), so it is selectable for training from ``TrainerConfig``.
 
-Both produce ``[E, C, d]`` dispatch buffers that the expert-parallel a2a
+All produce ``[E, C, d]`` dispatch buffers that the expert-parallel a2a
 (``core/microop.py``) exchanges across the `model` mesh axis.
 """
 from __future__ import annotations
@@ -13,6 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.gating import GatingResult
+from repro.kernels.dispatch import invert_slots
+from repro.kernels import ops as kernel_ops
 
 
 # ---------------------------------------------------------------------------
@@ -74,9 +83,36 @@ def combine_scatter(buf: jax.Array, g: GatingResult, n_experts: int,
     return jnp.sum(gathered * w.astype(buf.dtype), axis=1)
 
 
+# ---------------------------------------------------------------------------
+# pallas backend (fused kernels)
+# ---------------------------------------------------------------------------
+
+def _flat_rows(g: GatingResult, cap: int) -> jax.Array:
+    """[T, k] flat capacity-buffer row per (token, choice); -1 = dropped."""
+    return jnp.where(g.dropped, -1, g.expert_idx * cap + g.position)
+
+
+def dispatch_pallas(x: jax.Array, g: GatingResult, n_experts: int,
+                    cap: int) -> jax.Array:
+    """x: [T, d] -> buffers [E, C, d] via the fused gather kernel."""
+    rows = _flat_rows(g, cap)
+    src_tok, _ = invert_slots(rows, n_experts * cap)
+    disp, _ = kernel_ops.dispatch_combine_op(use_pallas=True)
+    return disp(x, src_tok, rows).reshape(n_experts, cap, x.shape[-1])
+
+
+def combine_pallas(buf: jax.Array, g: GatingResult, n_experts: int,
+                   cap: int) -> jax.Array:
+    rows = _flat_rows(g, cap)
+    w = jnp.where(g.dropped, 0.0, g.gate_weights)
+    _, comb = kernel_ops.dispatch_combine_op(use_pallas=True)
+    return comb(buf.reshape(n_experts * cap, -1), rows, w)
+
+
 BACKENDS = {
     "einsum": (dispatch_einsum, combine_einsum),
     "scatter": (dispatch_scatter, combine_scatter),
+    "pallas": (dispatch_pallas, combine_pallas),
 }
 
 

@@ -30,24 +30,17 @@ def capacity(n_tokens: int, n_experts: int, top_k: int,
     return max(8, -(-c // 8) * 8)
 
 
-def top_k_gating(logits: jax.Array, top_k: int, cap: int,
-                 aux_loss_weight: float = 0.01,
-                 rng: jax.Array | None = None,
-                 jitter: float = 0.0) -> GatingResult:
-    """logits: [T, E].  Returns dispatch metadata with static shapes.
-
-    Position assignment follows GShard: tokens claim capacity slots in order
-    (cumsum over the one-hot dispatch mask); tokens past the capacity are
-    dropped (residual connection carries them, as in DeepSpeed).
+def gating_from_topk(expert_idx: jax.Array, gate_w: jax.Array,
+                     probs: jax.Array, cap: int,
+                     aux_loss_weight: float = 0.01) -> GatingResult:
+    """Shared capacity/position/aux epilogue: turn raw top-k picks
+    (idx [T,k], renormalized weights [T,k], full probs [T,E]) into the
+    complete dispatch metadata.  Both the XLA gating path and the fused
+    Pallas kernel (``kernels.ops.topk_gating_op``) feed this, so they agree
+    exactly on slots, drops and the aux loss.
     """
-    n_tokens, n_experts = logits.shape
-    if jitter > 0.0 and rng is not None:
-        logits = logits + jitter * jax.random.normal(rng, logits.shape,
-                                                     logits.dtype)
-    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-
-    gate_w, expert_idx = jax.lax.top_k(probs, top_k)            # [T, k]
-    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    n_tokens, n_experts = probs.shape
+    top_k = expert_idx.shape[1]
 
     # Aux loss (Switch eq.4): E * sum_e f_e * p_e, f_e from top-1 assignment.
     top1 = expert_idx[:, 0]
@@ -68,3 +61,41 @@ def top_k_gating(logits: jax.Array, top_k: int, cap: int,
     gate_w = jnp.where(dropped, 0.0, gate_w)
     return GatingResult(expert_idx.astype(jnp.int32), gate_w,
                         position.astype(jnp.int32), dropped, aux, probs)
+
+
+def top_k_gating(logits: jax.Array, top_k: int, cap: int,
+                 aux_loss_weight: float = 0.01,
+                 rng: jax.Array | None = None,
+                 jitter: float = 0.0) -> GatingResult:
+    """logits: [T, E].  Returns dispatch metadata with static shapes.
+
+    Position assignment follows GShard: tokens claim capacity slots in order
+    (cumsum over the one-hot dispatch mask); tokens past the capacity are
+    dropped (residual connection carries them, as in DeepSpeed).
+    """
+    if jitter > 0.0 and rng is not None:
+        logits = logits + jitter * jax.random.normal(rng, logits.shape,
+                                                     logits.dtype)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+    gate_w, expert_idx = jax.lax.top_k(probs, top_k)            # [T, k]
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+    return gating_from_topk(expert_idx, gate_w, probs, cap, aux_loss_weight)
+
+
+def router_top_k_gating(x: jax.Array, router: jax.Array, top_k: int,
+                        cap: int, aux_loss_weight: float = 0.01, *,
+                        compute_backend: str = "xla") -> GatingResult:
+    """The full gating network: ``x @ router`` + softmax + top-k.
+
+    On the pallas backend the router matmul is folded into the fused
+    softmax/top-k kernel (one VMEM pass, k <= 2 on the MoE paths); the
+    capacity/position/aux epilogue is shared with ``top_k_gating`` so the
+    two backends produce identical GatingResults.
+    """
+    if compute_backend != "pallas":
+        return top_k_gating(x @ router, top_k, cap, aux_loss_weight)
+    from repro.kernels import ops as kernel_ops
+    idx, gate_w, probs = kernel_ops.topk_gating_op(x, router, top_k,
+                                                   use_pallas=True)
+    return gating_from_topk(idx, gate_w, probs, cap, aux_loss_weight)

@@ -19,7 +19,8 @@ from jax.experimental.shard_map import shard_map
 from repro.configs.base import MoEConfig
 from repro.core import dispatch as D
 from repro.core import microop
-from repro.core.gating import GatingResult, capacity, top_k_gating
+from repro.core.gating import capacity, router_top_k_gating
+from repro.kernels.ops import grouped_ffn_op, resolve_backend
 
 EP_AXIS = "model"           # expert-parallel mesh axis
 DP_AXES = ("pod", "data")   # data-parallel mesh axes
@@ -67,8 +68,17 @@ def init_moe_params(key, d_model: int, d_ff: int, n_experts: int,
     return MoEParams(router, wi, wu, wo)
 
 
-def expert_ffn(wi, wu, wo, x, ffn_type: str = "swiglu"):
-    """x: [E_rows, n, d] with per-row expert weights [E_rows, d, f]."""
+def expert_ffn(wi, wu, wo, x, ffn_type: str = "swiglu",
+               compute_backend: str = "xla"):
+    """x: [E_rows, n, d] with per-row expert weights [E_rows, d, f].
+
+    ``compute_backend="pallas"`` runs the grouped-GEMM kernel
+    (``kernels.ops.grouped_ffn_op``, custom-VJP so the train step's
+    backward stays on tiled grouped GEMMs); ``"xla"`` keeps the einsum
+    formulation the kernel is oracle-tested against.
+    """
+    if compute_backend == "pallas":
+        return grouped_ffn_op(x, wi, wu, wo, ffn_type, use_pallas=True)
     h = jnp.einsum("end,edf->enf", x, wi)
     if ffn_type == "swiglu":
         u = jnp.einsum("end,edf->enf", x, wu)
@@ -106,8 +116,10 @@ def _moe_shard_body(x, router, wi, wu, wo, *, cfg: MoEConfig, ffn_type: str,
     k = top_k or cfg.top_k
     cap = capacity(t_local, e, k, cfg.capacity_factor)
 
-    logits = x @ router                                           # [T, E]
-    g = top_k_gating(logits, k, cap, cfg.aux_loss_weight)
+    backend = resolve_backend(cfg.compute_backend)
+    # fused router matmul + softmax + top-k on the pallas backend
+    g = router_top_k_gating(x, router, k, cap, cfg.aux_loss_weight,
+                            compute_backend=backend)
 
     disp, comb = D.get_backend(dispatch_backend)
     buf = disp(x, g, e, cap)                                      # [E, C, d]
@@ -118,7 +130,7 @@ def _moe_shard_body(x, router, wi, wu, wo, *, cfg: MoEConfig, ffn_type: str,
     def ffn_rows(rows):                                           # [ep*E_local, c, d]
         rs = rows.reshape(ep, e_local, rows.shape[1], d_model)
         rs = rs.transpose(1, 0, 2, 3).reshape(e_local, ep * rows.shape[1], d_model)
-        out = expert_ffn(wi, wu, wo, rs, ffn_type)
+        out = expert_ffn(wi, wu, wo, rs, ffn_type, backend)
         if tp_axis is not None:
             out = lax.psum(out, tp_axis)     # contract the tp-sharded hidden
         out = out.reshape(e_local, ep, rows.shape[1], d_model)

@@ -20,9 +20,11 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import MoEConfig
-from repro.core.gating import capacity, top_k_gating
+from repro.core.gating import capacity, router_top_k_gating
 from repro.core.moe import MoEParams, expert_ffn
 from repro.core.placement import PlacementPlan
+from repro.kernels import ops as kernel_ops
+from repro.kernels.dispatch import invert_slots
 
 
 class PlanArrays(NamedTuple):
@@ -112,10 +114,12 @@ def _serve_body(x, router, wi, wu, wo, plan: PlanArrays, *, cfg: MoEConfig,
     cap = cap_override or capacity(t_local, e, top_k, cfg.capacity_factor)
     slot_cap = slot_capacity(cap, min_replicas)
 
-    logits = x @ router
+    backend = kernel_ops.resolve_backend(cfg.compute_backend)
     # gating capacity stays per-expert (cap); the per-slot limit is enforced
-    # below after tokens are spread over the expert's replicas
-    g = top_k_gating(logits, top_k, cap, cfg.aux_loss_weight)
+    # below after tokens are spread over the expert's replicas.  The router
+    # matmul is fused into the gating kernel on the pallas backend.
+    g = router_top_k_gating(x, router, top_k, cap, cfg.aux_loss_weight,
+                            compute_backend=backend)
 
     # --- route to replica slots instead of home experts -------------------
     slots = route_to_slots(g.expert_idx, g.position, plan)      # [T, k]
@@ -126,11 +130,19 @@ def _serve_body(x, router, wi, wu, wo, plan: PlanArrays, *, cfg: MoEConfig,
     pos = jnp.sum(pos.reshape(*slots.shape, n_slots) * oh, axis=-1)
     dropped = g.dropped | (pos >= slot_cap)
 
-    flat_idx = jnp.where(dropped, n_slots * slot_cap, slots * slot_cap + pos)
-    buf = jnp.zeros((n_slots * slot_cap + 1, d_model), x.dtype)
-    src = jnp.broadcast_to(x[:, None, :], (*slots.shape, d_model))
-    buf = buf.at[flat_idx.reshape(-1)].set(src.reshape(-1, d_model), mode="drop")
-    buf = buf[:-1].reshape(n_dev, s_pack * slot_cap, d_model)
+    # single source of truth for the slot-row map: -1 encodes dropped
+    rows = jnp.where(dropped, -1, slots * slot_cap + pos)       # [T, k]
+    if backend == "pallas":
+        src_tok, _ = invert_slots(rows, n_slots * slot_cap)
+        disp, _ = kernel_ops.dispatch_combine_op(use_pallas=True)
+        buf = disp(x, src_tok, rows)
+    else:
+        flat_idx = jnp.where(rows < 0, n_slots * slot_cap, rows)
+        buf = jnp.zeros((n_slots * slot_cap + 1, d_model), x.dtype)
+        src = jnp.broadcast_to(x[:, None, :], (*slots.shape, d_model))
+        buf = buf.at[flat_idx.reshape(-1)].set(src.reshape(-1, d_model),
+                                               mode="drop")[:-1]
+    buf = buf.reshape(n_dev, s_pack * slot_cap, d_model)
 
     # --- a2a to slot owners ------------------------------------------------
     # n_dev logical devices map onto ep physical ranks (group = n_dev/ep
@@ -160,8 +172,10 @@ def _serve_body(x, router, wi, wu, wo, plan: PlanArrays, *, cfg: MoEConfig,
     wu_h = wu_full[safe] if wu_full is not None else None
 
     # --- compute packed experts sequentially (§6.2) ------------------------
+    # replica-packed [S, n, d] slot buffers feed the same grouped-FFN op the
+    # training layer uses (the Pallas grouped GEMM on that backend)
     toks = recv.transpose(1, 0, 2, 3).reshape(s_pack, ep * slot_cap, d_model)
-    out = expert_ffn(wi_h, wu_h, wo_h, toks, ffn_type)            # [S, n, d]
+    out = expert_ffn(wi_h, wu_h, wo_h, toks, ffn_type, backend)   # [S, n, d]
     out = out * (hosted >= 0)[:, None, None]
     out = out.reshape(s_pack, ep, slot_cap, d_model).transpose(1, 0, 2, 3)
 
@@ -169,10 +183,14 @@ def _serve_body(x, router, wi, wu, wo, plan: PlanArrays, *, cfg: MoEConfig,
     back = lax.all_to_all(out.reshape(ep, s_pack * slot_cap, d_model),
                           ep_axis, split_axis=0, concat_axis=0, tiled=True)
     flat = back.reshape(n_slots * slot_cap, d_model)
-    gather_idx = jnp.clip(slots * slot_cap + pos, 0, n_slots * slot_cap - 1)
-    vals = flat[gather_idx]                                       # [T, k, d]
-    w = jnp.where(dropped, 0.0, g.gate_weights)[..., None]
-    y = jnp.sum(vals.astype(jnp.float32) * w, axis=1).astype(x.dtype)
+    w = jnp.where(dropped, 0.0, g.gate_weights)
+    if backend == "pallas":
+        _, comb = kernel_ops.dispatch_combine_op(use_pallas=True)
+        y = comb(flat, rows, w).astype(x.dtype)
+    else:
+        vals = flat[jnp.maximum(rows, 0)]    # dropped gather row 0, w == 0
+        y = jnp.sum(vals.astype(jnp.float32) * w[..., None],
+                    axis=1).astype(x.dtype)
     return y, g.expert_idx, g.router_probs
 
 

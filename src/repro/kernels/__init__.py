@@ -2,7 +2,9 @@
 oracles (ref.py) and backend-dispatching wrappers (ops.py):
 
   moe_ffn          grouped expert FFN GEMM (the MoE hot spot, paper Fig. 2)
-  topk_gating      fused router softmax + top-k
+                   + grouped_matmul, the dgrad/wgrad primitive of its VJP
+  topk_gating      fused router matmul + softmax + top-k
+  dispatch         fused capacity-buffer scatter / gate-weighted combine
   flash_attention  online-softmax attention (causal/SWA/bidirectional, GQA)
   rwkv6            chunked WKV recurrence (rwkv6-1.6b)
   ssd              Mamba2 chunk scan (zamba2-1.2b)
@@ -10,6 +12,7 @@ oracles (ref.py) and backend-dispatching wrappers (ops.py):
 Kernels compile natively on TPU; this container validates them with
 ``interpret=True`` (kernel bodies executed on CPU) against ref.py.
 """
-from repro.kernels.ops import (grouped_ffn_op, flash_attention_op, rwkv6_op,
-                               ssd_op, on_tpu)
+from repro.kernels.ops import (dispatch_combine_op, flash_attention_op,
+                               grouped_ffn_op, on_tpu, resolve_backend,
+                               rwkv6_op, ssd_op, topk_gating_op)
 from repro.kernels.topk_gating import topk_gating_fused

@@ -1,0 +1,115 @@
+"""Fused dispatch/combine Pallas kernels: scatter tokens into per-expert
+capacity buffers and gather them back gate-weighted, in one pass each.
+
+Neither side materializes the [T, E, C] one-hot dispatch mask (the einsum
+oracle) nor the [T*k, d] broadcast copy of the token block (the jnp scatter
+backend).  Instead the host-side caller inverts the metadata-sized
+(token -> slot) map into a (slot -> token) int32 index (``invert_slots``,
+one O(E*C) scatter of ids, no feature data), and:
+
+  * ``dispatch_rows``  — grid over output-row tiles; each tile gathers its
+    source rows straight out of the VMEM-resident token block and applies an
+    optional per-row scale (scale also serves the combine-backward, where
+    the scattered rows are gate-weighted cotangents).
+  * ``combine_rows``   — grid over token tiles; each token gathers its k
+    slot rows from the VMEM-resident buffer and reduces them with the gate
+    weights in fp32.
+
+Empty slots / dropped choices are index -1 and come out exactly zero.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tiling import block_and_pad, default_interpret
+
+
+def invert_slots(rows, n_rows: int):
+    """[T, k] flat destination row per (token, choice), -1 for dropped ->
+    ([n_rows] source token id, [n_rows] source choice id), -1 for empty.
+
+    Metadata-sized (int32, no feature dim); gating guarantees destination
+    rows are unique so a plain scatter-set is exact.
+    """
+    t, k = rows.shape
+    flat = rows.reshape(-1)
+    choice = jnp.arange(t * k, dtype=jnp.int32)
+    tgt = jnp.where(flat < 0, n_rows, flat)
+    src = jnp.full((n_rows + 1,), -1, jnp.int32)
+    src = src.at[tgt].set(choice, mode="drop")[:-1]
+    return jnp.where(src >= 0, src // k, -1), jnp.where(src >= 0, src % k, -1)
+
+
+def _dispatch_kernel(src_ref, scale_ref, x_ref, o_ref):
+    idx = src_ref[...][:, 0]                            # [br]
+    rows = jnp.take(x_ref[...], jnp.maximum(idx, 0), axis=0)
+    s = jnp.where(idx >= 0, scale_ref[...][:, 0], 0.0)  # [br] f32
+    o_ref[...] = (rows.astype(jnp.float32) * s[:, None]).astype(o_ref.dtype)
+
+
+def dispatch_rows(x, src_tok, scale=None, *, block_rows: int = 1024,
+                  interpret: bool | None = None):
+    """x: [T, d]; src_tok: [R] int32 source token per output row (-1 empty);
+    scale: optional [R] f32 per-row weight (default 1).  -> [R, d] x.dtype.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    t, d = x.shape
+    r = src_tok.shape[0]
+    if scale is None:
+        scale = jnp.ones((r,), jnp.float32)
+    br, r_pad = block_and_pad(r, block_rows)
+    if r_pad != r:
+        src_tok = jnp.pad(src_tok, (0, r_pad - r), constant_values=-1)
+        scale = jnp.pad(scale, (0, r_pad - r))
+    out = pl.pallas_call(
+        _dispatch_kernel,
+        grid=(r_pad // br,),
+        in_specs=[
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, d), x.dtype),
+        interpret=interpret,
+    )(src_tok[:, None], scale.astype(jnp.float32)[:, None], x)
+    return out[:r]
+
+
+def _combine_kernel(idx_ref, w_ref, buf_ref, o_ref):
+    idx = idx_ref[...]                                  # [bt, k]
+    vals = jnp.take(buf_ref[...], jnp.maximum(idx, 0), axis=0)  # [bt, k, d]
+    w = jnp.where(idx >= 0, w_ref[...], 0.0)            # [bt, k] f32
+    o_ref[...] = jnp.sum(vals.astype(jnp.float32) * w[..., None],
+                         axis=1).astype(o_ref.dtype)
+
+
+def combine_rows(buf, rows, weights, *, block_t: int = 1024,
+                 interpret: bool | None = None):
+    """buf: [R, d] slot rows; rows: [T, k] int32 flat slot per (token,
+    choice), -1 dropped; weights: [T, k] gate weights.  -> [T, d] buf.dtype.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    r, d = buf.shape
+    t, k = rows.shape
+    bt, t_pad = block_and_pad(t, block_t)
+    if t_pad != t:
+        rows = jnp.pad(rows, ((0, t_pad - t), (0, 0)), constant_values=-1)
+        weights = jnp.pad(weights, ((0, t_pad - t), (0, 0)))
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=(t_pad // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((bt, k), lambda i: (i, 0)),
+            pl.BlockSpec((r, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, d), buf.dtype),
+        interpret=interpret,
+    )(rows, weights.astype(jnp.float32), buf)
+    return out[:t]

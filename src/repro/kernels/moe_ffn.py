@@ -5,8 +5,13 @@ a *grouped* GEMM, which XLA handles poorly as separate dots).
 TPU mapping: grid (E, T/bt, F/bf).  Per step the MXU sees
 [bt, D] @ [D, bf] -> act -> [bt, bf] @ [bf, D], accumulating the second
 product over the F tiles into the fp32 output block (revisited across the
-innermost grid dim).  All tile dims are multiples of 128 for MXU alignment;
+innermost grid dim).  Ragged T/F extents are padded up to the tile (zeros
+flow through as zeros) instead of shrinking the tile below MXU alignment;
 VMEM footprint = x(bt*D) + wi/wu/wo tiles (D*bf each) + out(bt*D) fp32.
+
+``grouped_matmul`` is the same tiling discipline as a bare grouped GEMM —
+the building block the custom-VJP backward (kernels/ops.py) uses to express
+dgrad/wgrad, so fwd and bwd share MXU shapes.
 """
 from __future__ import annotations
 
@@ -15,7 +20,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tiling import LANE, block_and_pad, default_interpret
 
 
 def _kernel(x_ref, wi_ref, wu_ref, wo_ref, o_ref, *, ffn_type: str):
@@ -38,21 +44,32 @@ def _kernel(x_ref, wi_ref, wu_ref, wo_ref, o_ref, *, ffn_type: str):
 
 def grouped_ffn(x, wi, wu, wo, *, ffn_type: str = "swiglu",
                 block_t: int = 256, block_f: int = 512,
-                interpret: bool = True):
-    """x: [E, T, D]; wi/wu: [E, D, F]; wo: [E, F, D] -> [E, T, D]."""
+                interpret: bool | None = None):
+    """x: [E, T, D]; wi/wu: [E, D, F]; wo: [E, F, D] -> [E, T, D].
+
+    ``wu`` may be None for gelu FFNs: the kernel never reads the up
+    projection on that path, so ``wi`` is passed again as a zero-cost
+    layout-compatible alias (no zeros tensor is materialized).
+    """
+    if interpret is None:
+        interpret = default_interpret()
     e, t, d = x.shape
     f = wi.shape[-1]
-    bt = min(block_t, t)
-    while t % bt:
-        bt //= 2
-    bf = min(block_f, f)
-    while f % bf:
-        bf //= 2
     if wu is None:
-        wu = wo  # unused placeholder with a valid [E, ?, ?] layout
-        assert ffn_type != "swiglu"
-        wu = jnp.zeros_like(wi)
-    grid = (e, t // bt, f // bf)
+        if ffn_type == "swiglu":
+            raise ValueError("swiglu FFN requires the up projection wu")
+        wu = wi
+    bt, t_pad = block_and_pad(t, block_t)
+    bf, f_pad = block_and_pad(f, block_f, sub=LANE)   # F is a lane dim in wi
+    if t_pad != t:
+        x = jnp.pad(x, ((0, 0), (0, t_pad - t), (0, 0)))
+    if f_pad != f:
+        # zero hidden units: h==0 there, gelu(0)=0 and silu(0)*0=0, and the
+        # matching wo rows are zero — padded F contributes exactly nothing
+        wi = jnp.pad(wi, ((0, 0), (0, 0), (0, f_pad - f)))
+        wu = jnp.pad(wu, ((0, 0), (0, 0), (0, f_pad - f)))
+        wo = jnp.pad(wo, ((0, 0), (0, f_pad - f), (0, 0)))
+    grid = (e, t_pad // bt, f_pad // bf)
     out = pl.pallas_call(
         functools.partial(_kernel, ffn_type=ffn_type),
         grid=grid,
@@ -63,7 +80,43 @@ def grouped_ffn(x, wi, wu, wo, *, ffn_type: str = "swiglu",
             pl.BlockSpec((1, bf, d), lambda e_, t_, f_: (e_, f_, 0)),
         ],
         out_specs=pl.BlockSpec((1, bt, d), lambda e_, t_, f_: (e_, t_, 0)),
-        out_shape=jax.ShapeDtypeStruct((e, t, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((e, t_pad, d), jnp.float32),
         interpret=interpret,
     )(x, wi, wu, wo)
-    return out.astype(x.dtype)
+    return out[:, :t].astype(x.dtype)
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    o_ref[0] = jnp.dot(a_ref[0], b_ref[0], preferred_element_type=jnp.float32)
+
+
+def grouped_matmul(a, b, *, block_m: int = 256, block_n: int = 512,
+                   interpret: bool | None = None):
+    """Grouped GEMM: a [E, M, K] @ b [E, K, N] -> [E, M, N] in fp32.
+
+    The dgrad/wgrad primitive of the grouped-FFN backward: every gradient
+    of ``grouped_ffn`` is one of these per expert row, tiled exactly like
+    the forward (full-K blocks resident in VMEM, M/N padded to the tile).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    e, m, k = a.shape
+    n = b.shape[-1]
+    bm, m_pad = block_and_pad(m, block_m)
+    bn, n_pad = block_and_pad(n, block_n, sub=LANE)   # N is the lane dim
+    if m_pad != m:
+        a = jnp.pad(a, ((0, 0), (0, m_pad - m), (0, 0)))
+    if n_pad != n:
+        b = jnp.pad(b, ((0, 0), (0, 0), (0, n_pad - n)))
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(e, m_pad // bm, n_pad // bn),
+        in_specs=[
+            pl.BlockSpec((1, bm, k), lambda e_, m_, n_: (e_, m_, 0)),
+            pl.BlockSpec((1, k, bn), lambda e_, m_, n_: (e_, 0, n_)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e_, m_, n_: (e_, m_, n_)),
+        out_shape=jax.ShapeDtypeStruct((e, m_pad, n_pad), jnp.float32),
+        interpret=interpret,
+    )(a, b)
+    return out[:, :m, :n]

@@ -29,6 +29,24 @@ def ref_topk_gating(logits, k: int):
     return idx.astype(jnp.int32), w, probs
 
 
+def ref_dispatch_rows(x, src_tok, scale=None):
+    """Slot-buffer dispatch.  x: [T, d]; src_tok: [R] source token per slot
+    row (-1 empty); scale: optional [R] f32.  -> [R, d] in x.dtype."""
+    rows = x[jnp.maximum(src_tok, 0)]
+    s = jnp.where(src_tok >= 0,
+                  1.0 if scale is None else scale.astype(jnp.float32), 0.0)
+    return (rows.astype(jnp.float32) * s[:, None]).astype(x.dtype)
+
+
+def ref_combine_rows(buf, rows, weights):
+    """Gate-weighted combine.  buf: [R, d]; rows: [T, k] flat slot per
+    (token, choice), -1 dropped; weights: [T, k].  -> [T, d] in buf.dtype."""
+    vals = buf[jnp.maximum(rows, 0)]                    # [T, k, d]
+    w = jnp.where(rows >= 0, weights.astype(jnp.float32), 0.0)
+    return jnp.sum(vals.astype(jnp.float32) * w[..., None],
+                   axis=1).astype(buf.dtype)
+
+
 def ref_attention(q, k, v, *, causal: bool = True, window: int = 0):
     """q: [B, Sq, H, hd]; k/v: [B, Skv, KV, hd] -> [B, Sq, H, hd]."""
     b, sq, h, hd = q.shape

@@ -1,0 +1,59 @@
+"""Shared tiling policy for the Pallas kernels.
+
+All kernels block their token/feature dims for the MXU; extents that do not
+tile evenly are PADDED up to the chosen block rather than silently shrinking
+the block below hardware alignment (a 1-wide tile turns the MXU into a
+scalar unit).  Padding rows/columns are zeros, which every kernel here maps
+to zeros (matmul, softmax-with-slice, masked gather), and the caller slices
+the pad back off.
+"""
+from __future__ import annotations
+
+import jax
+
+LANE = 128     # MXU/VPU lane width — ideal multiple for blocked dims
+SUBLANE = 8    # f32 sublane height — minimum alignment for small extents
+
+
+def default_interpret() -> bool:
+    """Pallas kernels compile natively on TPU; everywhere else the bodies
+    run in interpret mode (the correctness-validation path in this
+    CPU-only container)."""
+    return jax.default_backend() != "tpu"
+
+
+def pad_to(n: int, b: int) -> int:
+    return -(-n // b) * b
+
+
+def block_and_pad(n: int, block: int, align: int = LANE,
+                  sub: int = SUBLANE) -> tuple[int, int]:
+    """Choose a tile size for a dim of extent ``n`` under requested
+    ``block``.  Returns ``(tile, padded_extent)``.
+
+    * ``n`` divisible by a ``sub``-aligned ``min(block, n)`` -> keep the
+      requested block and no padding (the fast path — production shapes
+      are pre-aligned).
+    * ``n <= align`` -> one ``sub``-aligned tile covering the whole
+      (padded) extent.
+    * otherwise -> the multiple of ``align`` (<= block, floored at
+      ``align``) that minimizes the padded extent, ties to the larger
+      tile.
+
+    The tile is always a multiple of ``sub`` — ragged extents cost
+    padding, never alignment.  Pass ``sub=LANE`` for a lane (last) block
+    dim, where the hardware unit is 128 rather than the f32 sublane 8; an
+    explicitly-requested unaligned ``block`` is bumped to the aligned
+    choice rather than honored.
+    """
+    b = min(block, n)
+    if b > 0 and n % b == 0 and b % sub == 0:
+        return b, n
+    if n <= align:
+        b = pad_to(n, sub)
+        return b, b
+    best = align
+    for cand in range(align, max(block, align) + 1, align):
+        if pad_to(n, cand) <= pad_to(n, best):
+            best = cand
+    return best, pad_to(n, best)

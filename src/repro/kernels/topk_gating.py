@@ -1,10 +1,13 @@
-"""Fused router kernel: softmax + top-k (k<=2) + renormalized gate weights
-in one VMEM pass over token tiles (the gating network of paper §2.1 — it
-sits on the critical path before every dispatch a2a, so fusing removes two
-HBM round-trips of the [T, E] probability matrix).
+"""Fused router kernel: (optional router matmul) + softmax + top-k (k<=2) +
+renormalized gate weights in one VMEM pass over token tiles (the gating
+network of paper §2.1 — it sits on the critical path before every dispatch
+a2a, so fusing removes two HBM round-trips of the [T, E] probability matrix
+and, with the router folded in, the [T, E] logits round-trip as well).
 
-Grid: (T/bt,).  Block: logits [bt, E] resident in VMEM; outputs are the
-top-k ids/weights + full probs (the popularity estimator consumes probs).
+Grid: (T/bt,).  Block: logits (or x [bt, D] + resident router [D, E])
+in VMEM; outputs are the top-k ids/weights + full probs (the popularity
+estimator consumes probs).  Ragged T pads up to the tile; padded rows are
+sliced off by the caller.
 """
 from __future__ import annotations
 
@@ -14,15 +17,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.tiling import block_and_pad, default_interpret
 
-def _kernel(logits_ref, idx_ref, w_ref, probs_ref, *, k: int):
-    x = logits_ref[...].astype(jnp.float32)            # [bt, E]
+
+def _softmax_topk(logits, idx_ref, w_ref, probs_ref, k: int):
+    x = logits.astype(jnp.float32)                     # [bt, E]
     m = jnp.max(x, axis=-1, keepdims=True)
     ex = jnp.exp(x - m)
     probs = ex / jnp.sum(ex, axis=-1, keepdims=True)
     probs_ref[...] = probs
 
-    e = x.shape[-1]
     iota = jax.lax.broadcasted_iota(jnp.int32, probs.shape, 1)
     p = probs
     ws, ids = [], []
@@ -38,26 +42,57 @@ def _kernel(logits_ref, idx_ref, w_ref, probs_ref, *, k: int):
     w_ref[...] = w
 
 
-def topk_gating_fused(logits, k: int = 2, *, block_t: int = 1024,
-                      interpret: bool = True):
-    """logits: [T, E] -> (idx [T,k] i32, w [T,k] f32, probs [T,E] f32)."""
-    t, e = logits.shape
-    bt = min(block_t, t)
-    while t % bt:
-        bt //= 2
-    return pl.pallas_call(
-        functools.partial(_kernel, k=k),
-        grid=(t // bt,),
-        in_specs=[pl.BlockSpec((bt, e), lambda i: (i, 0))],
+def _kernel(logits_ref, idx_ref, w_ref, probs_ref, *, k: int):
+    _softmax_topk(logits_ref[...], idx_ref, w_ref, probs_ref, k)
+
+
+def _fused_kernel(x_ref, router_ref, idx_ref, w_ref, probs_ref, *, k: int):
+    x = x_ref[...]                                     # [bt, D]
+    logits = jnp.dot(x, router_ref[...],
+                     preferred_element_type=jnp.float32)
+    # round like the unfused XLA path (bf16 matmul emits bf16) so both
+    # backends pick identical experts
+    _softmax_topk(logits.astype(x.dtype), idx_ref, w_ref, probs_ref, k)
+
+
+def topk_gating_fused(logits_or_x, k: int = 2, *, router=None,
+                      block_t: int = 1024, interpret: bool | None = None):
+    """Without ``router``: logits [T, E] -> (idx [T,k] i32, w [T,k] f32,
+    probs [T,E] f32).  With ``router`` [D, E]: the first argument is the
+    token block x [T, D] and the router matmul is folded into the kernel.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    t = logits_or_x.shape[0]
+    e = router.shape[-1] if router is not None else logits_or_x.shape[-1]
+    bt, t_pad = block_and_pad(t, block_t)
+    x = logits_or_x
+    if t_pad != t:
+        x = jnp.pad(x, ((0, t_pad - t), (0, 0)))
+    if router is None:
+        kern = functools.partial(_kernel, k=k)
+        in_specs = [pl.BlockSpec((bt, e), lambda i: (i, 0))]
+        args = (x,)
+    else:
+        kern = functools.partial(_fused_kernel, k=k)
+        d = logits_or_x.shape[-1]
+        in_specs = [pl.BlockSpec((bt, d), lambda i: (i, 0)),
+                    pl.BlockSpec((d, e), lambda i: (0, 0))]
+        args = (x, router)
+    idx, w, probs = pl.pallas_call(
+        kern,
+        grid=(t_pad // bt,),
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((bt, k), lambda i: (i, 0)),
             pl.BlockSpec((bt, k), lambda i: (i, 0)),
             pl.BlockSpec((bt, e), lambda i: (i, 0)),
         ),
         out_shape=(
-            jax.ShapeDtypeStruct((t, k), jnp.int32),
-            jax.ShapeDtypeStruct((t, k), jnp.float32),
-            jax.ShapeDtypeStruct((t, e), jnp.float32),
+            jax.ShapeDtypeStruct((t_pad, k), jnp.int32),
+            jax.ShapeDtypeStruct((t_pad, k), jnp.float32),
+            jax.ShapeDtypeStruct((t_pad, e), jnp.float32),
         ),
         interpret=interpret,
-    )(logits)
+    )(*args)
+    return idx[:t], w[:t], probs[:t]

@@ -42,6 +42,12 @@ def main(argv=None):
                          "decode (0 = score-only prefill)")
     ap.add_argument("--path-len", type=int, default=3)
     ap.add_argument("--policy", default="lina", choices=["lina", "uniform"])
+    ap.add_argument("--compute-backend", default=None,
+                    choices=["auto", "xla", "pallas"],
+                    help="MoE compute backend for every serve-path layer "
+                         "(fused gating + slot dispatch/combine + grouped "
+                         "expert FFN on 'pallas'); default keeps the arch "
+                         "config")
     ap.add_argument("--no-plan-cache", action="store_true",
                     help="ablation: re-plan every layer of every batch")
     ap.add_argument("--seed", type=int, default=0)
@@ -49,6 +55,11 @@ def main(argv=None):
 
     cfg = get_config(args.arch)
     assert cfg.moe.enabled, "serve driver targets MoE archs"
+    if args.compute_backend is not None:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         compute_backend=args.compute_backend))
     params = lm_mod.init_params(cfg, jax.random.PRNGKey(args.seed))
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                       global_batch=4, seed=args.seed)

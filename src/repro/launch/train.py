@@ -41,6 +41,15 @@ def main(argv=None):
                     choices=["bf16", "int8_ef"],
                     help="compress the DP reduce (bf16 cast or int8 with "
                          "error feedback)")
+    ap.add_argument("--compute-backend", default=None,
+                    choices=["auto", "xla", "pallas"],
+                    help="MoE compute backend (MoEConfig.compute_backend): "
+                         "Pallas kernels for gating/grouped FFN vs the XLA "
+                         "einsum path; default keeps the arch config")
+    ap.add_argument("--dispatch-backend", default="scatter",
+                    choices=["einsum", "scatter", "pallas"],
+                    help="token dispatch/combine backend "
+                         "(core.dispatch.BACKENDS)")
     ap.add_argument("--mesh", default=None,
                     help="data x model mesh, e.g. 2x4 (needs that many "
                          "devices; on CPU force them with XLA_FLAGS="
@@ -52,6 +61,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
+    if args.compute_backend is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe,
+                                         compute_backend=args.compute_backend))
     data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                           global_batch=args.batch, seed=args.seed)
     opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
@@ -63,7 +76,8 @@ def main(argv=None):
                          schedule=None if args.schedule == "implicit"
                          else args.schedule,
                          partition_bytes=args.partition_bytes,
-                         grad_compression=args.grad_compression)
+                         grad_compression=args.grad_compression,
+                         dispatch_backend=args.dispatch_backend)
     mesh = None
     if args.mesh:
         from repro.launch.mesh import make_mesh

@@ -52,6 +52,10 @@ class TrainerConfig:
     schedule: Optional[str] = None
     partition_bytes: float = reduce_mod.DEFAULT_PARTITION_BYTES
     grad_compression: Optional[str] = None   # None | "bf16" | "int8_ef"
+    # token dispatch/combine backend (core.dispatch.BACKENDS): "scatter"
+    # (jnp production), "einsum" (oracle), or "pallas" (fused kernels —
+    # pairs with MoEConfig.compute_backend="pallas")
+    dispatch_backend: str = "scatter"
     fail_at_step: Optional[int] = None       # failure injection (tests)
     straggler_factor: float = 3.0
     pack_warmup: int = 10                    # paper: packing decided at step 10
@@ -71,6 +75,7 @@ class Trainer:
         self.stateful_reduce = cfg.grad_compression == "int8_ef"
         self.step_fn = jax.jit(make_train_step(
             model_cfg, mesh, opt_cfg, lina=cfg.lina,
+            dispatch_backend=cfg.dispatch_backend,
             microbatches=cfg.microbatches, fsdp=False,
             schedule=cfg.schedule, partition_bytes=cfg.partition_bytes,
             grad_compression=cfg.grad_compression))

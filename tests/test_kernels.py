@@ -43,7 +43,86 @@ def test_grouped_ffn(e, t, d, f, dtype, ffn_type):
                                atol=TOL[dtype], rtol=TOL[dtype])
 
 
-@pytest.mark.parametrize("t,e,k", [(64, 8, 1), (128, 16, 2), (32, 4, 2)])
+@pytest.mark.parametrize("e,t,d,f", [(2, 300, 64, 96), (3, 17, 32, 40),
+                                     (1, 130, 64, 200)])
+def test_grouped_ffn_ragged_shapes_pad(e, t, d, f):
+    """T/F that do not tile the requested blocks pad up instead of
+    shrinking the tile (the old path halved bt/bf down to scalar tiles)."""
+    k = keys(4)
+    x = jax.random.normal(k[0], (e, t, d)) * 0.3
+    wi = jax.random.normal(k[1], (e, d, f)) * 0.05
+    wu = jax.random.normal(k[2], (e, d, f)) * 0.05
+    wo = jax.random.normal(k[3], (e, f, d)) * 0.05
+    got = grouped_ffn(x, wi, wu, wo, block_t=128, block_f=128)
+    want = ref.ref_grouped_ffn(x, wi, wu, wo, "swiglu")
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_grouped_ffn_gelu_without_up_projection():
+    """gelu FFNs pass wu=None; no zeros tensor is built for it."""
+    k = keys(3)
+    e, t, d, f = 2, 32, 16, 48
+    x = jax.random.normal(k[0], (e, t, d)) * 0.3
+    wi = jax.random.normal(k[1], (e, d, f)) * 0.05
+    wo = jax.random.normal(k[2], (e, f, d)) * 0.05
+    got = grouped_ffn(x, wi, None, wo, ffn_type="gelu", block_t=16)
+    want = ref.ref_grouped_ffn(x, wi, None, wo, "gelu")
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+    with pytest.raises(ValueError):
+        grouped_ffn(x, wi, None, wo, ffn_type="swiglu")
+
+
+@pytest.mark.parametrize("e,m,k_,n", [(2, 37, 24, 41), (4, 64, 16, 64),
+                                      (1, 256, 32, 100)])
+def test_grouped_matmul(e, m, k_, n):
+    from repro.kernels.moe_ffn import grouped_matmul
+    kk = keys(2)
+    a = jax.random.normal(kk[0], (e, m, k_))
+    b = jax.random.normal(kk[1], (e, k_, n))
+    got = grouped_matmul(a, b)
+    want = jnp.einsum("emk,ekn->emn", a, b)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+def test_grouped_ffn_op_custom_vjp_matches_oracle_grads():
+    """The kernel-path backward (dgrad/wgrad as grouped GEMMs) must match
+    autodiff through the einsum oracle, for both FFN types."""
+    from repro.kernels.ops import grouped_ffn_op
+    for ffn_type in ("swiglu", "gelu"):
+        k = keys(4)
+        e, t, d, f = 2, 24, 16, 32
+        x = jax.random.normal(k[0], (e, t, d)) * 0.3
+        wi = jax.random.normal(k[1], (e, d, f)) * 0.05
+        wu = jax.random.normal(k[2], (e, d, f)) * 0.05 \
+            if ffn_type == "swiglu" else None
+        wo = jax.random.normal(k[3], (e, f, d)) * 0.05
+
+        gp = jax.grad(lambda a: (grouped_ffn_op(*a, ffn_type,
+                                                use_pallas=True) ** 2).sum())(
+            (x, wi, wu, wo))
+        gr = jax.grad(lambda a: (ref.ref_grouped_ffn(*a, ffn_type)
+                                 ** 2).sum())((x, wi, wu, wo))
+        for a, b in zip(jax.tree.leaves(gp), jax.tree.leaves(gr)):
+            np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+def test_block_and_pad_alignment_invariants():
+    """Chosen tiles are always hardware-aligned and tile the padded extent;
+    ragged extents pad up instead of shrinking the tile (incl. the T=17
+    full-extent case, which must not yield an unaligned 17-row tile)."""
+    from repro.kernels.tiling import LANE, SUBLANE, block_and_pad
+    for n in (5, 16, 17, 50, 100, 128, 130, 256, 300, 1000, 4096):
+        for block in (16, 128, 256, 1024):
+            for sub in (SUBLANE, LANE):
+                b, n_pad = block_and_pad(n, block, sub=sub)
+                assert b % sub == 0, (n, block, sub, b)
+                assert n_pad % b == 0 and n_pad >= n, (n, block, sub, b, n_pad)
+                # padding never exceeds one tile's worth
+                assert n_pad - n < b, (n, block, sub, b, n_pad)
+
+
+@pytest.mark.parametrize("t,e,k", [(64, 8, 1), (128, 16, 2), (32, 4, 2),
+                                   (50, 8, 2)])
 def test_topk_gating(t, e, k):
     logits = jax.random.normal(keys(1)[0], (t, e))
     idx, w, probs = topk_gating_fused(logits, k, block_t=16)
@@ -51,6 +130,54 @@ def test_topk_gating(t, e, k):
     assert (np.asarray(idx) == np.asarray(ridx)).all()
     np.testing.assert_allclose(w, rw, atol=1e-6)
     np.testing.assert_allclose(probs, rprobs, atol=1e-6)
+
+
+@pytest.mark.parametrize("t,d,e,k", [(64, 16, 8, 2), (50, 32, 4, 1),
+                                     (128, 8, 16, 2)])
+def test_topk_gating_fused_router(t, d, e, k):
+    """Router matmul folded into the kernel == matmul-then-gate oracle."""
+    kk = keys(2)
+    x = jax.random.normal(kk[0], (t, d))
+    router = jax.random.normal(kk[1], (d, e)) * 0.3
+    idx, w, probs = topk_gating_fused(x, k, router=router, block_t=16)
+    ridx, rw, rprobs = ref.ref_topk_gating(x @ router, k)
+    assert (np.asarray(idx) == np.asarray(ridx)).all()
+    np.testing.assert_allclose(w, rw, atol=1e-6)
+    np.testing.assert_allclose(probs, rprobs, atol=1e-6)
+
+
+@pytest.mark.parametrize("t,n_rows,d,k", [(32, 40, 16, 2), (64, 72, 8, 1),
+                                          (100, 60, 32, 2)])
+def test_dispatch_combine_rows(t, n_rows, d, k):
+    """The fused scatter/gather kernels vs their jnp oracles, including
+    empty rows (-1) and dropped choices."""
+    from repro.kernels.dispatch import combine_rows, dispatch_rows
+    kk = keys(4)
+    x = jax.random.normal(kk[0], (t, d))
+    rows = jax.random.randint(kk[1], (t, k), -1, n_rows)
+    # de-duplicate destination rows (gating guarantees uniqueness)
+    flat = np.full((t * k,), -1, np.int64)
+    seen = set()
+    for i, r in enumerate(np.asarray(rows).reshape(-1)):
+        if r >= 0 and r not in seen:
+            flat[i] = r
+            seen.add(r)
+    rows = jnp.asarray(flat.reshape(t, k), jnp.int32)
+
+    src = np.full((n_rows,), -1, np.int64)
+    for i, r in enumerate(flat):
+        if r >= 0:
+            src[r] = i // k
+    src = jnp.asarray(src, jnp.int32)
+
+    buf = dispatch_rows(x, src, block_rows=16)
+    np.testing.assert_allclose(buf, ref.ref_dispatch_rows(x, src), atol=1e-6)
+
+    w = jnp.abs(jax.random.normal(kk[2], (t, k)))
+    big = jax.random.normal(kk[3], (n_rows, d))
+    y = combine_rows(big, rows, w, block_t=16)
+    np.testing.assert_allclose(y, ref.ref_combine_rows(big, rows, w),
+                               atol=1e-5, rtol=1e-5)
 
 
 @pytest.mark.parametrize("b,s,h,kv,hd", [(1, 64, 2, 2, 32), (2, 128, 4, 2, 32),
