@@ -1,0 +1,271 @@
+"""Autoscale benchmark: static-uniform vs static-lina vs the telemetry-
+driven controller under drifting-popularity traffic.
+
+Each trace (``repro.sched.workloads`` scenarios — the rotating topic
+mixture and the flash crowd are the two drifting-popularity cases; the
+full run adds the diurnal tide) is replayed identically through four
+serving variants:
+
+  static-uniform   identity placement, no replication (DeepSpeed layout);
+  static-lina      Lina's Eq. 1 placement computed ONCE from the profiled
+                   popularity and held fixed — the deployment-time plan
+                   the ROADMAP's "static PlacementPlan with a fixed
+                   max_pack" names; what drift leaves behind;
+  lina-dynamic     the PR-1/PR-2 stack — per-batch two-phase re-planning
+                   with the PlanCache's §5.2 drift invalidation (reported
+                   for context: it re-fits every batch but pays the
+                   paper's blocking phase-2 re-plan on most of them);
+  autoscaled       the same stack with an ``AdaptiveScheduler`` attached:
+                   per-layer plans come from the telemetry
+                   popularity-envelope at the controller's cadence
+                   (hysteresis-gated, migration-throttled), the per-batch
+                   planner and blocking phase-2 are bypassed.
+
+The acceptance comparison is autoscaled vs the two *static* plans; the
+dynamic re-planner rows quantify what per-batch freshness costs in p95.
+
+Latency methodology: open-loop virtual-clock replay (``engine.simulate``)
+with ``time_scale=0`` and a *modeled* per-step service time from
+``benchmarks.inference_model`` — per layer, the straggler device's FFN +
+a2a time under the plan's realized load (paper §2.2), plus the paper's
+scheduler overheads (per-layer phase-2 check / blocking re-plan) for the
+``lina-dynamic`` variant (the only one that schedules per batch; the
+static variants and the autoscaler never block a layer — except that any
+batch the autoscaler's pre-bootstrap window DID fine-tune is charged) and
+the expert-weight migration time for controller swaps.  Host wall time is
+reported separately (us_per_call) — single-host CPU wall time cannot see
+device-load imbalance, which is the quantity under test.
+
+The full run writes ``BENCH_autoscale.json`` (committed); ``--smoke``
+writes ``BENCH_autoscale.smoke.json`` (gitignored, uploaded by CI).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.infer_side import _skewed_smoke
+from benchmarks.inference_model import InferenceLayerModel
+from repro.configs import TRANSFORMER_XL, with_experts
+from repro.configs.base import A100_IB
+from repro.data import DataConfig, SyntheticLM
+from repro.runtime.engine import (EngineConfig, ServingEngine, simulate,
+                                  summarize_results)
+from repro.runtime.server import MoEServer, ServerConfig, profile_from_training
+from repro.sched import (AdaptiveScheduler, ControllerConfig, generate_trace,
+                         get_spec)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = "BENCH_autoscale.json"
+
+# the latency model evaluates the measured (dimensionless) device loads at
+# paper scale: a full engine micro-batch maps to this many model tokens
+MODEL_TOKENS = 32768
+
+N_EXPERTS = 16
+MAX_PACK = 3                  # sub-slots per device: a TIGHT slot budget
+#                               (48 slots, 16 experts) — adaptivity only
+#                               matters when replication is not free
+VARIANTS = ("uniform", "lina-static", "lina-dynamic", "autoscaled")
+
+
+def _make_service_model(full_cfg, n_dev, engine_tokens, *, lina: bool,
+                        scheduler=None):
+    """Modeled distributed seconds per engine step (see module docstring)."""
+    d_ff = full_cfg.moe.d_ff or full_cfg.d_ff
+    mult = 3 if full_cfg.ffn_type == "swiglu" else 2
+    lm = InferenceLayerModel(full_cfg.d_model, d_ff, mult, n_dev, hw=A100_IB)
+    link = A100_IB.ici_bw * A100_IB.ici_links
+    expert_bytes = mult * full_cfg.d_model * d_ff * 2        # bf16 stacks
+    scale = MODEL_TOKENS / engine_tokens
+
+    def model(stats, n_tokens):
+        n_tok = max(1.0, n_tokens * scale)
+        # the autoscaled variant (lina=False) has no per-layer scheduler
+        # sync — but its pre-bootstrap steps still run the per-batch
+        # planner, so a layer that DID block on phase-2 is charged for it
+        t = sum(lm.layer_time(n_tok, float(s.device_load.max()),
+                              finetuned=s.finetuned,
+                              lina=lina or s.finetuned)
+                for s in stats)
+        if scheduler is not None:
+            # weight movement of controller swaps, charged when it happens
+            t += scheduler.controller.pop_migration() * expert_bytes / link
+        return t
+
+    return model
+
+
+def _imbalance(stats) -> float:
+    """Token-weighted max/mean device-load imbalance: each served layer
+    contributes its straggler ratio (max device token share / mean)
+    weighted by the tokens it dispatched.  This is exactly proportional to
+    the total straggler-link a2a bytes over the run relative to a
+    perfectly balanced run — the §5 transfer-balance objective as a single
+    number.  (Token weighting keeps one-token decode batches, whose ratio
+    is structurally ~n_dev/replicas for ANY scheduler, from drowning the
+    signal; a plain time-aggregate would instead launder per-step
+    imbalance that happens to rotate across devices.)"""
+    num = den = 0.0
+    for s in stats:
+        load = np.asarray(s.device_load, np.float64)
+        w = max(s.n_tokens, 1)
+        num += w * float(load.max() / max(load.mean(), 1e-12))
+        den += w
+    return num / den if den else 0.0
+
+
+def _early_popularity(stats, n_layers: int, n_experts: int,
+                      frac: float = 0.25) -> dict:
+    """Per-layer token-weighted popularity over the first ``frac`` of a
+    reference run — the freshest popularity a deployment-time (static)
+    planner could have observed before the trace drifts away from it."""
+    per_layer = {}
+    cut = max(1, int(len(stats) * frac))
+    for s in list(stats)[:cut]:
+        acc = per_layer.setdefault(s.layer, np.zeros((n_experts,)))
+        per_layer[s.layer] = acc + np.asarray(s.actual_pop, np.float64) * \
+            max(s.n_tokens, 1)
+    out = {}
+    for li in range(n_layers):
+        pop = per_layer.get(li)
+        if pop is None or np.sum(pop) <= 0:
+            pop = np.ones((n_experts,))
+        out[li] = pop / np.sum(pop)
+    return out
+
+
+def _run_variant(variant, cfg, full, params, prof, trace, seq,
+                 max_new_tokens, warm, ctrl_kwargs, static_pop=None):
+    from repro.core.placement import plan_placement
+
+    policy = "uniform" if variant == "uniform" else "lina"
+    server = MoEServer(cfg, params, prof,
+                       ServerConfig(path_len=3, schedule_policy=policy,
+                                    max_pack=MAX_PACK))
+    ecfg = EngineConfig(max_batch_tokens=4 * seq, max_batch_requests=8)
+    scheduler = None
+    if variant == "autoscaled":
+        scheduler = AdaptiveScheduler(server, ControllerConfig(**ctrl_kwargs))
+    elif variant == "lina-static":
+        # Eq. 1 + FFD from the trace's own EARLY popularity, fixed for the
+        # run: the strongest static plan a deployment could have shipped —
+        # right when it was built, stale once the workload drifts
+        server.publish_plans({
+            li: plan_placement(static_pop[li], server.n_dev, MAX_PACK)
+            for li in range(cfg.n_moe_layers)})
+    engine = ServingEngine(
+        server, ecfg, scheduler=scheduler,
+        service_model=_make_service_model(
+            full, server.n_dev, ecfg.max_batch_tokens,
+            lina=(variant == "lina-dynamic"), scheduler=scheduler))
+    if warm:
+        engine.warmup(seqs=(seq,), max_new_tokens=max_new_tokens,
+                      min_replicas_grid=(1, 2, 4))
+    t0 = time.perf_counter()
+    results = simulate(engine, trace, time_scale=0.0,
+                       max_new_tokens=max_new_tokens)
+    wall = time.perf_counter() - t0
+    m = summarize_results(results)
+    out = {
+        "p50_ms": m["latency_p50"] * 1e3, "p95_ms": m["latency_p95"] * 1e3,
+        "ttft_p95_ms": m["ttft_p95"] * 1e3,
+        "imbalance": _imbalance(engine.layer_stats),
+        "finetune_rate": engine.finetune_rate,
+        "plan_reuse": engine.plan_reuse_rate,
+        "wall_us_per_req": wall / max(len(results), 1) * 1e6,
+        "n_completed": len(results),
+    }
+    if scheduler is not None:
+        rep = scheduler.report()
+        out.update(swaps=rep["swaps"], bootstraps=rep["bootstraps"],
+                   churn_per_100_steps=rep["churn_per_100_steps"],
+                   migrated_slots=scheduler.controller.migrated_slots,
+                   drift_rates={li: round(l["drift_rate"], 3) for li, l in
+                                rep["telemetry"]["layers"].items()})
+    return out, engine
+
+
+def autoscale_benchmark(n_requests=48, seq=32, rate_hz=24.0,
+                        max_new_tokens=8, profile_batches=4,
+                        traces=("drift", "flash", "diurnal"), warm=True,
+                        interval=4, hysteresis=0.1, headroom=1.0,
+                        json_path: str = JSON_PATH):
+    """One row per (trace, variant) + a verdict row per trace; writes the
+    full comparison (specs, per-variant metrics, controller config and
+    churn) to ``json_path``."""
+    cfg, params = _skewed_smoke(TRANSFORMER_XL, N_EXPERTS)
+    full = with_experts(TRANSFORMER_XL, N_EXPERTS)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                      global_batch=4, seed=1)
+    ds = SyntheticLM(dcfg)
+    prof = profile_from_training(
+        cfg, params, (ds.batch(i) for i in range(profile_batches)),
+        path_len=3)
+    ctrl_kwargs = dict(interval=interval, hysteresis=hysteresis,
+                       headroom=headroom, min_observations=2)
+
+    rows = []
+    jtraces = {}
+    for tname in traces:
+        spec = get_spec(tname, n_requests=n_requests, seq=seq,
+                        rate_hz=rate_hz, seed=7)
+        trace = generate_trace(spec, cfg.vocab_size)
+        res = {}
+        static_pop = None
+        for variant in VARIANTS:
+            r, engine = _run_variant(variant, cfg, full, params, prof, trace,
+                                     seq, max_new_tokens, warm, ctrl_kwargs,
+                                     static_pop=static_pop)
+            res[variant] = r
+            if variant == "uniform":
+                # the static-lina baseline plans from the popularity the
+                # trace itself showed early on (its strongest static form)
+                static_pop = _early_popularity(
+                    engine.layer_stats, cfg.n_moe_layers, cfg.moe.n_experts)
+            extra = ""
+            if "churn_per_100_steps" in r:
+                extra = (f",churn_per_100={r['churn_per_100_steps']:.1f},"
+                         f"swaps={r['swaps']}")
+            rows.append((
+                f"autoscale/{tname}-{variant}", r["wall_us_per_req"],
+                f"p50_ms={r['p50_ms']:.1f},p95_ms={r['p95_ms']:.1f},"
+                f"imbalance={r['imbalance']:.2f},"
+                f"finetune_rate={r['finetune_rate']:.2f}{extra}"))
+        auto, stat, uni = res["autoscaled"], res["lina-static"], res["uniform"]
+        verdict = {
+            "p95_beats_static_uniform": auto["p95_ms"] < uni["p95_ms"],
+            "p95_beats_static_lina": auto["p95_ms"] < stat["p95_ms"],
+            "imbalance_beats_static_uniform":
+                auto["imbalance"] < uni["imbalance"],
+            "imbalance_beats_static_lina":
+                auto["imbalance"] < stat["imbalance"],
+        }
+        rows.append((f"autoscale/{tname}-verdict", 0.0,
+                     ",".join(f"{k}={v}" for k, v in verdict.items())))
+        jtraces[tname] = {
+            "spec": dataclasses.asdict(spec),
+            "variants": res,
+            "verdict": verdict,
+        }
+
+    if not os.path.isabs(json_path):
+        json_path = os.path.join(REPO_ROOT, json_path)
+    with open(json_path, "w") as fh:
+        json.dump({
+            "model": f"transformer-xl-{N_EXPERTS}e(smoke)",
+            "n_devices": N_EXPERTS,
+            "controller": ctrl_kwargs,
+            "latency_model": "inference_model.InferenceLayerModel@A100_IB, "
+                             f"{MODEL_TOKENS} tokens per full micro-batch, "
+                             "time_scale=0 (modeled service, measured loads)",
+            "max_new_tokens": max_new_tokens,
+            "warm": warm,
+            "traces": jtraces,
+        }, fh, indent=1)
+    rows.append(("autoscale/json", 0.0, json_path))
+    return rows

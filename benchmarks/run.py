@@ -20,7 +20,10 @@ import time
 SMOKE_KWARGS = {
     "schedules": dict(device_count=2, steps=2, batch=2, seq=16,
                       microbatches=2,
-                      schedules=("baseline", "priority+partition+pipeline")),
+                      schedules=("baseline", "fixed",
+                                 "priority+partition+pipeline"),
+                      partition_sweep=(128e3, 256e3),
+                      json_path="BENCH_schedules.smoke.json"),
     "fig16": dict(batches=2, seq=32),
     "table5": dict(batches=2, seq=32),
     "fig19": dict(batches=2, seq=32),
@@ -30,13 +33,18 @@ SMOKE_KWARGS = {
     # clobber the committed full-run BENCH_kernels.json trajectory
     "kernels": dict(models=("gpt2",), tokens_per_expert=8, iters=1, scale=8,
                     json_path="BENCH_kernels.smoke.json"),
+    "autoscale": dict(n_requests=10, seq=12, rate_hz=40.0,
+                      max_new_tokens=3, profile_batches=2,
+                      traces=("drift", "flash"), warm=False,
+                      json_path="BENCH_autoscale.smoke.json"),
 }
 
 
 def all_benchmarks():
-    from benchmarks import train_side, infer_side, kernel_side
+    from benchmarks import train_side, infer_side, kernel_side, autoscale_side
     return [
         ("kernels", kernel_side.kernels_benchmark),
+        ("autoscale", autoscale_side.autoscale_benchmark),
         ("table1", train_side.table1_a2a_fraction),
         ("fig10", train_side.fig10_training_speedup),
         ("fig14", train_side.fig14_design_ablation),

@@ -138,21 +138,29 @@ def fig15_partition_size():
 # measured (not simulated) schedule ablation
 # ---------------------------------------------------------------------------
 
-MEASURED_SCHEDULES = ("baseline", "priority", "priority+partition",
+MEASURED_SCHEDULES = ("baseline", "priority", "fixed", "priority+partition",
                       "priority+partition+pipeline")
 
 
 # The ablation times the SMOKE config (~1MB of gradients), so the paper-
 # scale 30MB default would collapse every partitioned schedule to a single
-# chunk; 256KB yields a real multi-chunk reduce at this scale.
+# chunk; the sweep below (the smoke-scale Fig. 15) finds the measured
+# minimum and the ablation runs at that size — 256KB is only the fallback
+# when the sweep is disabled.
 MEASURED_PARTITION_BYTES = 256e3
+PARTITION_SWEEP = (64e3, 128e3, 256e3, 512e3, 1e6)
 
 
 def _measure_schedules_inprocess(schedules, steps, batch, seq, microbatches,
                                  partition_bytes=MEASURED_PARTITION_BYTES,
-                                 grad_compression=None):
+                                 grad_compression=None, partition_sweep=()):
     """Worker body: time each schedule's jitted train step on THIS process's
-    device set (the parent forces the device count via XLA_FLAGS)."""
+    device set (the parent forces the device count via XLA_FLAGS).
+
+    With ``partition_sweep`` the worker first times the
+    ``priority+partition`` step at each candidate micro-op size (the
+    measured, smoke-scale Fig. 15) and runs the main ablation at the
+    measured minimum.  Returns (rows, sweep_rows, partition_bytes)."""
     from repro.launch.mesh import mesh_context
     from repro.optim import reduce as reduce_mod
 
@@ -169,15 +177,11 @@ def _measure_schedules_inprocess(schedules, steps, batch, seq, microbatches,
     opt_cfg = AdamWConfig()
     opt0 = init_opt_state(params, opt_cfg)
     data = {k: jnp.asarray(v) for k, v in SyntheticLM(dc).batch(0).items()}
-    # grads are params-shaped: report the micro-op count each schedule
-    # actually compiled (non-partitioned schedules run one fused reduce)
-    part_chunks = reduce_mod.n_chunks_for_bytes(params, partition_bytes)
-    out = []
-    for sched in schedules:
-        n_chunks = part_chunks if "partition" in sched else 1
+
+    def time_schedule(sched, pb):
         step = jax.jit(make_train_step(
             cfg, mesh, opt_cfg, fsdp=False, microbatches=microbatches,
-            schedule=sched, partition_bytes=partition_bytes,
+            schedule=sched, partition_bytes=pb,
             grad_compression=grad_compression))
         rstate = None
         if grad_compression == "int8_ef":
@@ -194,20 +198,52 @@ def _measure_schedules_inprocess(schedules, steps, batch, seq, microbatches,
                 r = step(p, o, data, *r[3:])
                 p, o = r[0], r[1]
             jax.block_until_ready(o.step)
-        us = (time.perf_counter() - t0) / steps * 1e6
+        return (time.perf_counter() - t0) / steps * 1e6
+
+    sweep_rows = []
+    sweep_times = {}
+    if partition_sweep:
+        for pb in partition_sweep:
+            sweep_rows.append((float(pb), time_schedule("priority+partition",
+                                                        pb)))
+        sweep_times = dict(sweep_rows)
+        partition_bytes = min(sweep_rows, key=lambda r: r[1])[0]
+
+    # grads are params-shaped: report the micro-op count each schedule
+    # actually compiled (non-partitioned schedules run one fused reduce)
+    part_chunks = reduce_mod.n_chunks_for_bytes(params, partition_bytes)
+    out = []
+    for sched in schedules:
+        n_chunks = part_chunks if "partition" in sched else 1
+        # the sweep already timed priority+partition at the chosen size —
+        # reuse it instead of paying another compile + timed run
+        us = sweep_times.get(partition_bytes) \
+            if sched == "priority+partition" else None
+        if us is None:
+            us = time_schedule(sched, partition_bytes)
         out.append((sched, us, dp, ep, n_chunks))
-    return out
+    return out, sweep_rows, partition_bytes
 
 
 def measured_schedule_ablation(device_count: int = 4, steps: int = 5,
                                batch: int = 4, seq: int = 32,
                                microbatches: int = 2,
                                schedules=MEASURED_SCHEDULES,
-                               partition_bytes: float = MEASURED_PARTITION_BYTES,
-                               grad_compression=None):
+                               partition_bytes: float = None,
+                               partition_sweep=PARTITION_SWEEP,
+                               grad_compression=None,
+                               json_path: str = "BENCH_schedules.json"):
     """Measured wall time of each gradient-reduction schedule through the
     real jitted train step on a ``device_count``-device CPU mesh, with the
-    analytic paper-hardware step time for the same schedule alongside."""
+    analytic paper-hardware step time for the same schedule alongside.
+
+    ``partition_bytes=None`` (the default) auto-picks the micro-op size:
+    the worker times ``priority+partition`` over ``partition_sweep`` (the
+    measured, smoke-scale analogue of Fig. 15) and the ablation runs at the
+    measured minimum; the chosen value is recorded in ``json_path`` and in
+    every row.  Pass an explicit float to pin it."""
+    import json
+
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
@@ -217,8 +253,12 @@ def measured_schedule_ablation(device_count: int = 4, steps: int = 5,
     cmd = [sys.executable, "-m", "benchmarks.train_side",
            "--schedules", ",".join(schedules), "--steps", str(steps),
            "--batch", str(batch), "--seq", str(seq),
-           "--microbatches", str(microbatches),
-           "--partition-bytes", str(partition_bytes)]
+           "--microbatches", str(microbatches)]
+    if partition_bytes is None:
+        cmd += ["--partition-sweep",
+                ",".join(str(float(pb)) for pb in partition_sweep)]
+    else:
+        cmd += ["--partition-bytes", str(partition_bytes)]
     if grad_compression:
         cmd += ["--grad-compression", grad_compression]
     p = subprocess.run(cmd, env=env, cwd=repo, capture_output=True,
@@ -227,26 +267,54 @@ def measured_schedule_ablation(device_count: int = 4, steps: int = 5,
         raise RuntimeError(f"measure worker failed:\n{p.stderr[-3000:]}")
     measured = {}
     notes = {}
+    sweep = []
+    chosen = partition_bytes or MEASURED_PARTITION_BYTES
     for line in p.stdout.splitlines():
         if line.startswith("MEASURED "):
             _, sched, us, dp, ep, nchunks = line.split()
             measured[sched] = float(us)
             notes[sched] = f"mesh={dp}x{ep},n_chunks={nchunks}"
+        elif line.startswith("SWEEP "):
+            _, pb, us = line.split()
+            sweep.append((float(pb), float(us)))
+        elif line.startswith("CHOSEN "):
+            chosen = float(line.split()[1])
     sim = step_model_for(with_experts(GPT2_MOE, 16), SEQ, BATCH,
                          n_devices=16, hw=A100_IB)
     rows = []
+    jrows = []
     comp_note = f",compression={grad_compression}" if grad_compression else ""
+    for pb, us in sweep:
+        rows.append((f"schedules/partition-sweep/{int(pb/1e3)}KB", us,
+                     f"chosen={pb == chosen}"))
     for sched in schedules:
         sim_ms = simulate_step(sim, sched)["step_time"] * 1e3
         rows.append((f"schedules/measured/gpt2-{sched}", measured[sched],
                      f"{notes[sched]},microbatches={microbatches}{comp_note},"
+                     f"partition_bytes={chosen:.0f},"
                      f"sim_paperhw_step_ms={sim_ms:.3f}"))
+        jrows.append({"schedule": sched, "us_per_step": measured[sched],
+                      "notes": notes[sched],
+                      "sim_paperhw_step_ms": sim_ms})
     if "baseline" in measured and "priority+partition+pipeline" in measured:
         base = measured["baseline"]
         lina = measured["priority+partition+pipeline"]
         rows.append(("schedules/measured/speedup", 0.0,
                      f"baseline_us={base:.0f},lina_us={lina:.0f},"
                      f"measured_speedup={base / max(lina, 1e-9):.3f}"))
+    if not os.path.isabs(json_path):
+        json_path = os.path.join(repo, json_path)
+    with open(json_path, "w") as fh:
+        json.dump({
+            "partition_bytes": chosen,
+            "partition_bytes_source": "measured-sweep-min" if sweep
+            else "pinned",
+            "partition_sweep": [{"bytes": pb, "us_per_step": us}
+                                for pb, us in sweep],
+            "microbatches": microbatches,
+            "grad_compression": grad_compression,
+            "rows": jrows,
+        }, fh, indent=1)
     return rows
 
 
@@ -260,12 +328,20 @@ def _worker_main(argv=None):
     ap.add_argument("--microbatches", type=int, default=2)
     ap.add_argument("--partition-bytes", type=float,
                     default=MEASURED_PARTITION_BYTES)
+    ap.add_argument("--partition-sweep", default="",
+                    help="comma-separated micro-op sizes; when given, the "
+                         "measured minimum overrides --partition-bytes")
     ap.add_argument("--grad-compression", default=None)
     args = ap.parse_args(argv)
-    rows = _measure_schedules_inprocess(
+    sweep = tuple(float(s) for s in args.partition_sweep.split(",")) \
+        if args.partition_sweep else ()
+    rows, sweep_rows, chosen = _measure_schedules_inprocess(
         args.schedules.split(","), args.steps, args.batch, args.seq,
         args.microbatches, partition_bytes=args.partition_bytes,
-        grad_compression=args.grad_compression)
+        grad_compression=args.grad_compression, partition_sweep=sweep)
+    for pb, us in sweep_rows:
+        print(f"SWEEP {pb:.0f} {us:.1f}", flush=True)
+    print(f"CHOSEN {chosen:.0f}", flush=True)
     for sched, us, dp, ep, n_chunks in rows:
         print(f"MEASURED {sched} {us:.1f} {dp} {ep} {n_chunks}", flush=True)
 

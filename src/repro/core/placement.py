@@ -134,6 +134,128 @@ def plan_placement(popularity: np.ndarray, n_devices: int, max_pack: int = 4,
     return PlacementPlan(slot_expert, rep, n_rep, pop.astype(np.float32))
 
 
+def shed_to_budget(replica_counts: np.ndarray, popularity: np.ndarray,
+                   budget: int) -> np.ndarray:
+    """Shrink replica counts to a total slot budget: always decrement a
+    least-popular expert among the widest.  The single shedding policy
+    shared by ``plan_from_replicas`` and the controller's
+    ``replica_targets`` — it preserves popularity-monotonicity of the
+    counts, which the controller's tests pin."""
+    r = np.asarray(replica_counts, np.int64).copy()
+    pop = np.asarray(popularity, np.float64)
+    if budget < r.shape[0]:
+        raise ValueError(f"slot budget {budget} cannot host every one of "
+                         f"{r.shape[0]} experts once")
+    while r.sum() > budget:
+        mx = r.max()
+        cand = np.flatnonzero(r == mx)
+        r[cand[np.argmin(pop[cand])]] -= 1
+    return r
+
+
+def plan_from_replicas(popularity: np.ndarray, replica_counts: np.ndarray,
+                       n_devices: int, max_pack: int = 4,
+                       rep_width: int = 0,
+                       prev: Optional[PlacementPlan] = None
+                       ) -> PlacementPlan:
+    """Build a plan honoring *explicit* per-expert replica counts — the
+    constructor the adaptive controller (``repro.sched.controller``) uses,
+    where Eq. 1's ``round(N * pop_e)`` is replaced by telemetry-driven
+    targets (EWMA popularity + drift headroom).
+
+    Each expert e gets exactly ``replica_counts[e]`` slots (clipped to
+    [1, n_devices] and, collectively, to the ``n_devices * max_pack`` slot
+    budget — largest counts shed first).  Replicas are placed greedily on
+    the least-loaded device that (a) has a free sub-slot and (b) does not
+    already host e (falling back to any free sub-slot when every device
+    hosts it), so one expert's replicas spread across links — the §5
+    transfer-balance objective.
+
+    ``prev`` makes the placement *incremental*: up to the new count, an
+    expert keeps the devices that already host it, so a swap only moves
+    the weights of genuinely added replicas (minimizing the §6.2 weight
+    swap the controller's migration model charges for).
+
+    ``rep_width`` fixes the replica-table width (default ``n_devices``) so
+    controller-emitted plans keep a static shape across swaps and never
+    force a dispatch recompile.
+    """
+    pop = np.asarray(popularity, np.float64)
+    pop = pop / max(pop.sum(), 1e-12)
+    e = pop.shape[0]
+    r = np.clip(np.asarray(replica_counts, np.int64), 1, n_devices)
+    budget = n_devices * max_pack
+    assert budget >= e, "not enough slots to host every expert once"
+    r = shed_to_budget(r, pop, budget)
+    rep_width = rep_width or n_devices
+
+    keep: List[List[int]] = [[] for _ in range(e)]
+    if prev is not None and prev.n_devices == n_devices:
+        for d in range(n_devices):
+            for ex in prev.slot_expert[d]:
+                ex = int(ex)
+                if ex >= 0 and len(keep[ex]) < int(r[ex]) \
+                        and d not in keep[ex]:
+                    keep[ex].append(d)
+
+    slot_expert = np.full((n_devices, max_pack), -1, np.int32)
+    bin_load = np.zeros((n_devices,), np.float64)
+    bin_count = np.zeros((n_devices,), np.int32)
+    replicas: List[List[int]] = [[] for _ in range(e)]
+
+    def assign(ex: int, d: int, share: float) -> None:
+        slot_expert[d, bin_count[d]] = ex
+        replicas[ex].append(int(d * max_pack + bin_count[d]))
+        bin_load[d] += share
+        bin_count[d] += 1
+
+    for ex in np.argsort(-pop):                 # heaviest experts first
+        ex = int(ex)
+        share = pop[ex] / r[ex]
+        retained = [d for d in keep[ex] if bin_count[d] < max_pack]
+        for d in retained:
+            assign(ex, d, share)
+        for _ in range(int(r[ex]) - len(retained)):
+            order = np.lexsort((np.arange(n_devices), bin_load))
+            hosting = {s // max_pack for s in replicas[ex]}
+            free = [d for d in order if bin_count[d] < max_pack]
+            if not free:
+                raise ValueError("placement overflow: no free sub-slot")
+            spread = [d for d in free if d not in hosting]
+            assign(ex, (spread or free)[0], share)
+
+    rep = np.full((e, rep_width), -1, np.int32)
+    n_rep = np.zeros((e,), np.int32)
+    for ex in range(e):
+        rs = replicas[ex][:rep_width]
+        n_rep[ex] = len(rs)
+        rep[ex, : len(rs)] = rs
+    return PlacementPlan(slot_expert, rep, n_rep, pop.astype(np.float32))
+
+
+def transfer_balance_cost(plan: PlacementPlan,
+                          popularity: np.ndarray) -> float:
+    """The §5 objective the controller minimizes: the *maximum* per-device
+    token share under ``popularity`` — proportional to the largest
+    all-to-all transfer any link carries (the layer's straggler)."""
+    return float(plan.device_load(np.asarray(popularity, np.float64)).max())
+
+
+def migration_slots(old: PlacementPlan, new: PlacementPlan) -> int:
+    """Weight-movement cost of swapping ``old`` for ``new``: the number of
+    (device, expert) placements present in the new plan but not the old —
+    each one is an expert weight stack some device must fetch (§6.2's
+    weight swap)."""
+    moved = 0
+    for d in range(new.n_devices):
+        old_hosted = set(int(x) for x in old.slot_expert[d] if x >= 0) \
+            if d < old.n_devices else set()
+        for ex in new.slot_expert[d]:
+            if ex >= 0 and int(ex) not in old_hosted:
+                moved += 1
+    return moved
+
+
 def needs_finetune(est_pop: np.ndarray, actual_pop: np.ndarray,
                    top_k: int) -> bool:
     """Phase 2 (§5.2): fine-tune iff top-2k estimated != top-2k actual.

@@ -7,7 +7,14 @@ score-only (single-prefill) mode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gpt2-moe-smoke \
         --requests 24 --seq 64 --rate 20 --max-new-tokens 8 \
-        [--policy uniform|lina]
+        [--policy uniform|lina] [--autoscale] [--workload drift] [--warmup]
+
+``--workload`` picks a ``repro.sched.workloads`` scenario (drifting Zipf
+topic mixture, flash crowd, diurnal tide, ...) instead of the stationary
+Poisson trace; ``--autoscale`` attaches the telemetry-driven controller
+(``repro.sched``) so per-layer placement adapts to the traffic between
+micro-batches; ``--warmup`` pre-traces the (batch-bucket, min-replicas)
+compile grid before the first request arrives.
 """
 from __future__ import annotations
 
@@ -21,6 +28,8 @@ from repro.models import lm as lm_mod
 from repro.runtime.engine import (EngineConfig, ServingEngine, simulate,
                                   summarize_results)
 from repro.runtime.server import MoEServer, ServerConfig, profile_from_training
+from repro.sched import (AdaptiveScheduler, ControllerConfig, SCENARIOS,
+                         get_trace)
 
 import jax
 
@@ -50,6 +59,24 @@ def main(argv=None):
                          "config")
     ap.add_argument("--no-plan-cache", action="store_true",
                     help="ablation: re-plan every layer of every batch")
+    ap.add_argument("--workload", default=None,
+                    choices=sorted(SCENARIOS),
+                    help="trace scenario (repro.sched.workloads); default "
+                         "is a stationary Poisson trace")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="attach the telemetry-driven autoscaling "
+                         "controller (repro.sched): per-layer plans adapt "
+                         "to traffic between micro-batches")
+    ap.add_argument("--autoscale-interval", type=int, default=4,
+                    help="engine steps between controller evaluations")
+    ap.add_argument("--hysteresis", type=float, default=0.1,
+                    help="min relative transfer-balance improvement "
+                         "before the controller swaps a live plan")
+    ap.add_argument("--headroom", type=float, default=0.2,
+                    help="drift-rate -> replica-hedge gain")
+    ap.add_argument("--warmup", action="store_true",
+                    help="pre-trace the (batch-bucket, min-replicas) "
+                         "compile grid before serving")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -74,17 +101,36 @@ def main(argv=None):
                        ServerConfig(path_len=args.path_len,
                                     schedule_policy=args.policy,
                                     plan_cache=not args.no_plan_cache))
+    scheduler = None
+    if args.autoscale:
+        scheduler = AdaptiveScheduler(
+            server, ControllerConfig(interval=args.autoscale_interval,
+                                     hysteresis=args.hysteresis,
+                                     headroom=args.headroom))
     engine = ServingEngine(server,
                            EngineConfig(max_batch_tokens=args.batch_tokens,
-                                        max_batch_requests=args.batch_requests))
+                                        max_batch_requests=args.batch_requests),
+                           scheduler=scheduler)
+    if args.warmup:
+        print("warming up (pre-tracing the compile grid) ...", flush=True)
+        n = engine.warmup(seqs=(args.seq,),
+                          max_new_tokens=args.max_new_tokens)
+        print(f"warm-up traced {n} calls", flush=True)
 
-    rng = np.random.RandomState(1000 + args.seed)
-    t, trace = 0.0, []
-    for _ in range(args.requests):
-        t += rng.exponential(1.0 / args.rate)
-        trace.append((rng.randint(0, cfg.vocab_size, (args.seq,)), t))
+    if args.workload is not None:
+        trace = get_trace(args.workload, cfg.vocab_size,
+                          n_requests=args.requests, seq=args.seq,
+                          rate_hz=args.rate, seed=1000 + args.seed)
+        shape = args.workload
+    else:
+        rng = np.random.RandomState(1000 + args.seed)
+        t, trace = 0.0, []
+        for _ in range(args.requests):
+            t += rng.exponential(1.0 / args.rate)
+            trace.append((rng.randint(0, cfg.vocab_size, (args.seq,)), t))
+        shape = "stationary-poisson"
 
-    print(f"serving {args.requests} requests (Poisson rate {args.rate}/s, "
+    print(f"serving {args.requests} requests ({shape}, rate {args.rate}/s, "
           f"{args.max_new_tokens} new tokens each) ...", flush=True)
     results = simulate(engine, trace, max_new_tokens=args.max_new_tokens)
 
@@ -106,6 +152,12 @@ def main(argv=None):
           f"{np.mean([s.est_accurate for s in stats]):.1%}")
     print(f"device load imbalance (max/mean): "
           f"{(loads.max(1) / np.maximum(loads.mean(1), 1e-9)).mean():.2f}x")
+    if scheduler is not None:
+        rep = scheduler.report()
+        print(f"autoscaler: {rep['swaps']} swaps (+{rep['bootstraps']} "
+              f"bootstraps) over {rep['steps']} steps "
+              f"({rep['churn_per_100_steps']:.1f} swaps/100 steps), "
+              f"{scheduler.controller.migrated_slots} expert stacks moved")
     return 0
 
 

@@ -9,7 +9,7 @@ static program, so "priority" becomes *program order*: every reduce micro-op
 carries a compile-time dependency edge on the backward-a2a completion token
 (``core.microop.ordered_after``), which XLA cannot hoist above the a2a.
 
-Four schedules (the same names ``benchmarks/commmodel.simulate_step`` models
+Five schedules (the same names ``benchmarks/commmodel.simulate_step`` models
 analytically, so measured and simulated rows line up):
 
   ``baseline``                      one fused psum of the whole flattened
@@ -17,6 +17,18 @@ analytically, so measured and simulated rows line up):
                                     the DDP default (Fig. 7a).
   ``priority``                      same single op, but ordered after the
                                     backward-a2a token (Fig. 7b).
+  ``fixed``                         Fig. 7c: the whole-tensor reduce
+                                    *deferred past the second backward a2a*
+                                    of the MoE layers.  Under SPMD program
+                                    order this compiles to the same single
+                                    ordered op as ``priority`` — the token
+                                    already pins the reduce after every
+                                    backward (and forward) a2a — so its
+                                    measured row is the sanity anchor for
+                                    the analytic model, where the two
+                                    differ only through preemption of an
+                                    in-flight allreduce (which a static
+                                    SPMD program cannot express).
   ``priority+partition``            uniform micro-op chunks sized by
                                     ``partition_bytes``, each ordered after
                                     the token and chained among themselves
@@ -63,7 +75,7 @@ from repro.core import microop
 from repro.optim.compression import (Int8State, compress_int8_ef,
                                      init_int8_state)
 
-SCHEDULES = ("baseline", "priority", "priority+partition",
+SCHEDULES = ("baseline", "priority", "fixed", "priority+partition",
              "priority+partition+pipeline")
 COMPRESSIONS = (None, "bf16", "int8_ef")
 

@@ -130,10 +130,26 @@ class ServingEngine:
     """Queue -> prefill/decode micro-batches -> plan-cached dispatch."""
 
     def __init__(self, server: MoEServer, ecfg: Optional[EngineConfig] = None,
-                 clock: Callable[[], float] = time.perf_counter):
+                 clock: Callable[[], float] = time.perf_counter,
+                 scheduler=None,
+                 service_model: Optional[Callable] = None):
+        """``scheduler`` is an ``repro.sched.AdaptiveScheduler``: after each
+        micro-batch the engine feeds it the step's LayerStats and served
+        token count, and controller-published plans take effect from the
+        next micro-batch (decode state survives the swap).
+
+        ``service_model`` maps (step LayerStats list, n_tokens) -> modeled
+        seconds of *distributed* service time added on top of the measured
+        wall time in virtual-clock replay (``step(now=...)``): the paper's
+        methodology, where per-device load imbalance — invisible to
+        single-host wall time — slows the step via its straggler link (see
+        ``benchmarks.inference_model``).  Ignored in wall-clock mode."""
         self.server = server
         self.ecfg = ecfg or EngineConfig()
         self.clock = clock
+        self.scheduler = scheduler
+        self.service_model = service_model
+        self._step_stats: List[LayerStats] = []
         self._queue: Deque[Request] = deque()
         self._active: "OrderedDict[int, DecodeSlot]" = OrderedDict()
         self._path_states: "OrderedDict[int, np.ndarray]" = OrderedDict()
@@ -251,11 +267,19 @@ class ServingEngine:
             self.last_step_end = None
             return []
 
+        self._step_stats = []
         t0 = time.perf_counter()
         dec_res = self._run_decodes(decodes) if decodes else None
         pre_parts = self._run_prefills(prefills) if prefills else []
         service = time.perf_counter() - t0
-        completion = self.clock() if now is None else now + service * time_scale
+        n_tokens = len(decodes) + sum(r.tokens.shape[0] for r in prefills)
+        if now is None:
+            completion = self.clock()
+        else:
+            completion = now + service * time_scale
+            if self.service_model is not None:
+                completion += float(
+                    self.service_model(self._step_stats, n_tokens))
         self.last_step_end = completion
 
         out: List[RequestResult] = []
@@ -263,6 +287,10 @@ class ServingEngine:
             out.extend(self._finish_decodes(decodes, dec_res, completion))
         for group, res in pre_parts:
             out.extend(self._finish_prefills(group, res, completion))
+        if self.scheduler is not None:
+            # between micro-batches: feed telemetry, maybe publish plans —
+            # they apply from the NEXT step, never mid-batch
+            self.scheduler.after_step(self._step_stats, n_tokens)
         return out
 
     # --- decode phase -------------------------------------------------------
@@ -414,8 +442,24 @@ class ServingEngine:
 
     def _record_stats(self, stats) -> None:
         self.layer_stats.extend(stats)
+        self._step_stats.extend(stats)
         self._finetunes += sum(s.finetuned for s in stats)
         self._layers_served += len(stats)
+
+    # --- warm-up ------------------------------------------------------------
+    def warmup(self, seqs=(), max_new_tokens: int = 8,
+               min_replicas_grid=(1, 2)) -> int:
+        """Pre-trace the compile grid before traffic arrives (ROADMAP
+        warm-up follow-up): full prefill+decode at each prompt length in
+        ``seqs`` and the plan-honoring dispatch over every (decode
+        row-bucket up to ``max_batch_requests``) x ``min_replicas_grid``
+        combination — so neither the first request nor a controller plan
+        swap to an already-seen replica count compiles inside a timed
+        step.  Returns the number of traced calls."""
+        rows = range(1, self.ecfg.max_batch_requests + 1)
+        return self.server.warmup(seqs=seqs, rows=rows,
+                                  min_replicas_grid=min_replicas_grid,
+                                  max_new_tokens=max_new_tokens)
 
     def run(self) -> List[RequestResult]:
         """Drain queue AND in-flight generation in wall-clock mode."""

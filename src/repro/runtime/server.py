@@ -78,6 +78,7 @@ class LayerStats:
     est_accurate: bool
     plan_reused: bool              # plan came from the cache (no re-plan)
     device_load: np.ndarray        # token share per device (actual workload)
+    n_tokens: int = 0              # valid tokens this layer dispatched
 
 
 class ServeResult(NamedTuple):
@@ -129,6 +130,101 @@ class MoEServer:
         self._w_unembed = jnp.asarray(lm_mod.unembed_weight(self._cparams))
         self._gp_cache: dict = {}
         self._plan_arrays: dict = {}
+        # controller-published per-layer plans (repro.sched): while a layer
+        # has an override the per-batch planner (phase 1 + phase 2) is
+        # bypassed for it — the control loop owns placement at its own
+        # cadence instead of per micro-batch
+        self._plan_override: dict = {}
+        self._override_fresh: set = set()
+
+    # --- adaptive scheduling (repro.sched) ---------------------------------
+    def publish_plans(self, plans: dict) -> None:
+        """Install controller-published plans ({layer: PlacementPlan}).
+
+        Takes effect at the next micro-batch; in-flight decode state (KV
+        caches, rolling path ids) is untouched — plans move experts across
+        devices, they do not change the math (see
+        ``test_engine_plan_swap_mid_decode_is_transparent``)."""
+        self._plan_override.update(plans)
+        self._override_fresh.update(plans.keys())
+
+    def warmup(self, *, seqs=(), rows=(1,), min_replicas_grid=(1, 2),
+               max_new_tokens: int = 8) -> int:
+        """Pre-trace the jitted serve paths so neither the first request nor
+        a plan swap to an already-seen replica count is compile-dominated.
+
+        Two grids:
+          - full prefill (+ one decode step) at each prompt length in
+            ``seqs`` with a single-row batch — the first-request p95 path;
+          - the plan-honoring dispatch at every (decode row-bucket, cap,
+            min_replicas, replica-table width) combination reachable from
+            ``rows`` x ``min_replicas_grid`` — the shapes a controller plan
+            swap or a new decode-batch bucket would otherwise compile
+            inside a timed step.
+
+        Plan-cache contents/stats and published overrides are restored, so
+        warm-up leaves no scheduling trace.  Returns the number of traced
+        calls.
+        """
+        import dataclasses as _dc
+
+        cache = self.plan_cache
+        saved_cache = (dict(cache._plans),
+                       _dc.replace(cache.stats)) if cache is not None else None
+        saved_ov = (dict(self._plan_override), set(self._override_fresh))
+        traced = 0
+        try:
+            for s in seqs:
+                pre = self.prefill_batch(np.zeros((1, int(s)), np.int64),
+                                         cache_len=int(s) + max_new_tokens)
+                traced += 1
+                if max_new_tokens:
+                    self.decode_batch(np.zeros((1,), np.int64), pre.cache,
+                                      np.zeros((1,), np.int64))
+                    traced += 1
+            traced += self._warmup_dispatch(rows, min_replicas_grid)
+        finally:
+            if saved_cache is not None:
+                cache._plans.clear()
+                cache._plans.update(saved_cache[0])
+                cache.stats.hits = saved_cache[1].hits
+                cache.stats.misses = saved_cache[1].misses
+                cache.stats.invalidations = saved_cache[1].invalidations
+            self._plan_override = saved_ov[0]
+            self._override_fresh = saved_ov[1]
+        return traced
+
+    def _warmup_dispatch(self, rows, min_replicas_grid) -> int:
+        """Compile ``_dispatch`` for the (bucket, cap, min_replicas, width)
+        grid; dedupes combinations that collapse to the same static key."""
+        from repro.core.placement import plan_from_replicas
+
+        cfg = self.cfg
+        gp = self._group_params(0)
+        combos = set()
+        for n_valid in sorted(set(int(r) for r in rows)):
+            bucket = 1 << (n_valid - 1).bit_length()
+            cap = self._valid_capacity(n_valid, bucket)
+            for r in min_replicas_grid:
+                r = int(min(r, (self.n_dev * self.scfg.max_pack)
+                            // cfg.moe.n_experts, self.n_dev))
+                if r < 1:
+                    r = 1
+                # controller plans carry an n_dev-wide replica table, the
+                # per-batch planner a max_pack-wide one — trace both
+                for width in {self.n_dev, self.scfg.max_pack}:
+                    combos.add((bucket, cap, r, width))
+        for bucket, cap, r, width in sorted(combos):
+            plan = plan_from_replicas(
+                np.full((cfg.moe.n_experts,), 1.0 / cfg.moe.n_experts),
+                np.full((cfg.moe.n_experts,), r, np.int64),
+                self.n_dev, max_pack=self.scfg.max_pack, rep_width=width)
+            se, ro, nr = self._plan_device(plan)
+            h2 = jnp.zeros((bucket, cfg.d_model), jnp.dtype(cfg.dtype))
+            jax.block_until_ready(self._dispatch(
+                gp.moe, h2, se, ro, nr,
+                min_replicas=int(plan.n_replicas.min()), cap=cap))
+        return len(combos)
 
     # --- jitted layer pieces ----------------------------------------------
     def _attn_fn(self, gp, j, x):
@@ -185,6 +281,15 @@ class MoEServer:
         accurate = not needs_finetune(est, actual, scfg.top_k)
         reused = False
         finetuned = False
+        override = self._plan_override.get(li)
+        if override is not None:
+            # the control loop owns this layer's placement: no per-batch
+            # re-plan, no blocking phase-2 — drift is handled at the
+            # controller's cadence.  ``reused`` is False exactly once per
+            # publish (the swap itself), True while the plan is live.
+            fresh = li in self._override_fresh
+            self._override_fresh.discard(li)
+            return override, False, accurate, not fresh
         if scfg.schedule_policy == "uniform":
             # the uniform layout is static: look up before building so a
             # hit skips plan construction entirely
@@ -234,7 +339,13 @@ class MoEServer:
         uniform cold-start estimate.  Returns (y [T, d], top1 [T], stats).
         """
         cfg, scfg = self.cfg, self.scfg
-        if scfg.schedule_policy == "uniform" or not scfg.use_estimation or \
+        override = self._plan_override.get(li)
+        if override is not None:
+            # controller-owned layer: the plan's own popularity basis (the
+            # telemetry EWMA it was built from) stands in for the per-batch
+            # Ψ estimate — no per-token profile lookup on the hot path
+            est = np.asarray(override.popularity, np.float32)
+        elif scfg.schedule_policy == "uniform" or not scfg.use_estimation or \
                 (li < scfg.path_len and not has_state):
             est = np.full((cfg.moe.n_experts,),
                           1.0 / cfg.moe.n_experts, np.float32)
@@ -262,7 +373,8 @@ class MoEServer:
         # plan decides placement, the workload decides load
         stat = LayerStats(li, np.asarray(est), np.asarray(actual), finetuned,
                           accurate, reused,
-                          plan.device_load(actual.astype(np.float32)))
+                          plan.device_load(actual.astype(np.float32)),
+                          n_tokens=int(valid.sum()))
         return y, top1, stat
 
     def _plan_device(self, plan: PlacementPlan):

@@ -1,0 +1,307 @@
+"""Unit tests for the adaptive resource scheduler (repro.sched): workload
+determinism, replica-target properties (monotonicity, budget/floor), plan
+construction from explicit counts (incremental placement), telemetry EWMA /
+drift behavior, and controller hysteresis bounding churn."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.placement import (migration_slots, plan_from_replicas,
+                                  plan_placement, transfer_balance_cost)
+from repro.runtime.server import LayerStats
+from repro.sched import (AutoscaleController, ControllerConfig, TelemetryBus,
+                         TelemetryConfig, TraceSpec, generate_trace,
+                         replica_targets)
+
+
+# --- workload engine --------------------------------------------------------
+
+def test_trace_seeded_determinism():
+    spec = TraceSpec(kind="drifting_zipf", n_requests=12, seq=8, seed=5)
+    a = generate_trace(spec, 256)
+    b = generate_trace(spec, 256)
+    assert len(a) == len(b) == 12
+    for (ta, aa), (tb, ab) in zip(a, b):
+        np.testing.assert_array_equal(ta, tb)
+        assert aa == ab
+    c = generate_trace(dataclasses.replace(spec, seed=6), 256)
+    assert any((ta != tc).any() for (ta, _), (tc, _) in zip(a, c))
+
+
+def test_trace_kinds_and_validation():
+    with pytest.raises(ValueError, match="unknown workload kind"):
+        TraceSpec(kind="tsunami")
+    for kind in ("stationary", "drifting_zipf", "flash_crowd", "diurnal"):
+        tr = generate_trace(TraceSpec(kind=kind, n_requests=8, seq=4), 128)
+        assert len(tr) == 8
+        assert all(t.shape == (4,) and (t >= 0).all() and (t < 128).all()
+                   for t, _ in tr)
+        arr = [at for _, at in tr]
+        assert arr == sorted(arr)
+
+
+def test_flash_crowd_bursts_arrivals():
+    """Inside the flash window arrivals are flash_mult denser and tokens
+    come from the tiny far pool."""
+    spec = TraceSpec(kind="flash_crowd", n_requests=400, seq=4, seed=0,
+                     rate_hz=100.0, flash_mult=8.0, flash_pool=2)
+    tr = generate_trace(spec, 1024)
+    d = spec.duration
+    lo, hi = spec.flash_start * d, (spec.flash_start + spec.flash_dur) * d
+    inside = [t for t, at in tr if lo <= at < hi]
+    # the burst window holds far more than its share of requests
+    assert len(inside) > 2 * spec.flash_dur * len(tr)
+    # burst tokens all come from a 2-token pool
+    assert len({int(x) for t in inside for x in t}) <= 2
+
+
+def test_drifting_mixture_moves_hot_tokens():
+    spec = TraceSpec(kind="drifting_zipf", n_requests=60, seq=32, seed=3,
+                     rate_hz=30.0, drift_period=2.0)
+    tr = generate_trace(spec, 512)
+    third = len(tr) // 3
+    early = np.bincount(np.concatenate([t for t, _ in tr[:third]]),
+                        minlength=512)
+    late = np.bincount(np.concatenate([t for t, _ in tr[-third:]]),
+                       minlength=512)
+    # the dominant token set rotates with the mixture
+    assert early.argmax() != late.argmax()
+
+
+# --- replica targets --------------------------------------------------------
+
+def test_replica_targets_monotone_in_popularity():
+    rng = np.random.RandomState(0)
+    for _ in range(20):
+        pop = rng.dirichlet(np.ones(16) * 0.5)
+        for drift in (0.0, 0.5, 1.0):
+            r = replica_targets(pop, 16, drift_rate=drift, budget=48)
+            order = np.argsort(-pop)
+            sorted_r = r[order]
+            assert (np.diff(sorted_r) <= 0).all(), (pop, r)
+
+
+def test_replica_targets_budget_floor_and_bounds():
+    pop = np.array([.6, .2, .1, .05, .03, .01, .005, .005])
+    r = replica_targets(pop, 8, budget=24, floor=2)
+    assert r.sum() <= 24
+    assert (r >= 2).all()
+    assert (r <= 8).all()
+    # floor clips to what the budget can host
+    r1 = replica_targets(pop, 8, budget=8, floor=4)
+    assert (r1 == 1).all()
+    # hedge: full drift pulls allocations toward uniform
+    r_flat = replica_targets(pop, 8, drift_rate=1.0, headroom=5.0, budget=24)
+    r_sharp = replica_targets(pop, 8, drift_rate=0.0, budget=24)
+    assert r_flat.max() <= r_sharp.max()
+
+
+# --- plan construction ------------------------------------------------------
+
+def test_plan_from_replicas_honors_counts_and_shapes():
+    pop = np.array([.5, .2, .2, .1])
+    counts = np.array([4, 2, 2, 1])
+    plan = plan_from_replicas(pop, counts, n_devices=8, max_pack=2,
+                              rep_width=8)
+    np.testing.assert_array_equal(plan.n_replicas, counts)
+    assert plan.replica_of.shape == (4, 8)
+    assert plan.slot_expert.shape == (8, 2)
+    # every replica slot maps back to its expert
+    for ex in range(4):
+        for s in plan.replica_of[ex][: counts[ex]]:
+            d, sub = divmod(int(s), 2)
+            assert plan.slot_expert[d, sub] == ex
+    # replicas of one expert spread across distinct devices
+    devs = [int(s) // 2 for s in plan.replica_of[0][:4]]
+    assert len(set(devs)) == 4
+
+
+def test_plan_from_replicas_budget_shed_and_overflow():
+    pop = np.ones(4) / 4
+    plan = plan_from_replicas(pop, np.array([8, 8, 8, 8]), n_devices=4,
+                              max_pack=2)
+    assert plan.n_replicas.sum() == 8          # shed to the slot budget
+    with pytest.raises(AssertionError):
+        plan_from_replicas(np.ones(16) / 16, np.ones(16), n_devices=2,
+                           max_pack=2)
+
+
+def test_plan_from_replicas_incremental_retention():
+    """With ``prev`` given, unchanged replica counts keep their devices —
+    a swap that only widens one expert moves only the added replicas."""
+    pop = np.array([.4, .3, .2, .1])
+    r0 = np.array([2, 2, 2, 2])
+    p0 = plan_from_replicas(pop, r0, n_devices=8, max_pack=2, rep_width=8)
+    r1 = np.array([4, 2, 2, 2])
+    p1 = plan_from_replicas(pop, r1, n_devices=8, max_pack=2, rep_width=8,
+                            prev=p0)
+    assert migration_slots(p0, p1) == 2        # only the two new replicas
+    p1_fresh = plan_from_replicas(pop, r1, n_devices=8, max_pack=2,
+                                  rep_width=8)
+    assert migration_slots(p0, p1_fresh) >= migration_slots(p0, p1)
+
+
+def test_transfer_balance_cost_and_migration():
+    pop = np.array([.7, .1, .1, .1])
+    skew = plan_from_replicas(pop, np.array([1, 1, 1, 1]), 4, max_pack=2)
+    wide = plan_from_replicas(pop, np.array([4, 1, 1, 1]), 4, max_pack=2)
+    assert transfer_balance_cost(wide, pop) < transfer_balance_cost(skew, pop)
+    assert migration_slots(skew, skew) == 0
+    assert migration_slots(skew, wide) > 0
+
+
+# --- telemetry --------------------------------------------------------------
+
+def _stat(layer, pop, n_tokens=64, finetuned=False, reused=False):
+    pop = np.asarray(pop, np.float64)
+    return LayerStats(layer, pop, pop, finetuned, True, reused,
+                      device_load=pop[: 4], n_tokens=n_tokens)
+
+
+def test_bus_ewma_converges_and_drift_stays_low():
+    bus = TelemetryBus(TelemetryConfig(alpha=0.5, obs_tokens_ref=64.0))
+    pop = np.array([.4, .3, .2, .1])
+    for _ in range(30):
+        bus.observe_step([_stat(0, pop)], 64)
+    np.testing.assert_allclose(bus.popularity(0), pop, atol=1e-3)
+    assert bus.drift_rate(0) < 0.05
+    lt = bus.layer(0)
+    assert lt.steps == 30
+
+
+def test_bus_drift_rises_on_shift_and_envelope_covers_variance():
+    bus = TelemetryBus(TelemetryConfig(alpha=0.5))
+    a = np.array([.5, .3, .05, .05, .025, .025, .025, .025])
+    b = np.array([.025, .025, .025, .025, .05, .05, .3, .5])
+    for _ in range(10):
+        bus.observe_step([_stat(0, a)], 64)
+    assert bus.drift_rate(0) < 0.05
+    for _ in range(6):
+        bus.observe_step([_stat(0, b)], 64)
+    assert bus.drift_rate(0) > 0.2             # fast EWMA left the slow one
+    # alternating traffic: the envelope boosts the volatile hot experts
+    # relative to a stable one, beyond what their means alone would give
+    bus2 = TelemetryBus(TelemetryConfig(alpha=0.3))
+    for i in range(40):
+        bus2.observe_step([_stat(0, a if i % 2 else b)], 64)
+    mean = bus2.popularity(0)
+    env = bus2.popularity_envelope(0, risk=1.0)
+    assert env.shape == (8,)
+    np.testing.assert_allclose(env.sum(), 1.0, atol=1e-6)
+    assert env[0] / env[2] > mean[0] / mean[2]   # volatile over stable
+
+
+def test_bus_tiny_batches_barely_move_the_ewma():
+    bus = TelemetryBus(TelemetryConfig(alpha=0.5, obs_tokens_ref=64.0))
+    pop = np.array([.25, .25, .25, .25])
+    for _ in range(20):
+        bus.observe_step([_stat(0, pop, n_tokens=64)], 64)
+    spike = np.array([1.0, 0.0, 0.0, 0.0])
+    bus.observe_step([_stat(0, spike, n_tokens=1)], 1)
+    assert bus.popularity(0)[0] < 0.27         # one token cannot flip it
+
+
+def test_bus_cache_rates():
+    class Stats:
+        hits, misses, invalidations = 8, 2, 1
+    bus = TelemetryBus(TelemetryConfig(alpha=1.0))
+    bus.observe_cache(Stats())
+    assert bus.cache_rates["hit"] == pytest.approx(0.8)
+    assert bus.cache_rates["invalidation"] == pytest.approx(0.1)
+
+
+# --- controller -------------------------------------------------------------
+
+def _feed(bus, layer, pops, n=64):
+    for pop in pops:
+        bus.observe_step([_stat(layer, pop, n_tokens=n)], n)
+
+
+def test_controller_bootstraps_then_holds_under_hysteresis():
+    rng = np.random.RandomState(1)
+    base = np.array([.4, .3, .2, .1])
+    ctl = AutoscaleController(4, max_pack=2, cfg=ControllerConfig(
+        interval=1, min_observations=1, hysteresis=0.2, max_moves=0))
+    bus = TelemetryBus(TelemetryConfig(alpha=0.3))
+    swapped = []
+    for i in range(1, 41):
+        noisy = base + rng.uniform(-0.02, 0.02, 4)
+        _feed(bus, 0, [noisy / noisy.sum()])
+        swapped.append(ctl.step(bus, i) is not None)
+    assert swapped[0]                          # bootstrap fires immediately
+    assert ctl.bootstraps == 1
+    assert ctl.swaps <= 2                      # hysteresis holds the plan
+
+
+def test_controller_hysteresis_bounds_churn():
+    """Same noisy-but-stationary traffic: zero hysteresis churns far more
+    than the default gate; both see identical observations."""
+    def churn(hyst):
+        rng = np.random.RandomState(2)
+        ctl = AutoscaleController(4, max_pack=2, cfg=ControllerConfig(
+            interval=1, min_observations=1, hysteresis=hyst,
+            migration_weight=0.0, max_moves=0))
+        bus = TelemetryBus(TelemetryConfig(alpha=0.9))
+        for i in range(1, 61):
+            pop = rng.dirichlet([4, 3, 2, 1])
+            _feed(bus, 0, [pop])
+            ctl.step(bus, i)
+        return ctl.swaps
+    assert churn(0.0) > 2 * churn(0.3)
+    assert churn(0.6) <= 2
+
+
+def test_controller_tracks_popularity_shift():
+    ctl = AutoscaleController(8, max_pack=2, cfg=ControllerConfig(
+        interval=1, min_observations=1, hysteresis=0.05, max_moves=0,
+        migration_weight=0.0))
+    bus = TelemetryBus(TelemetryConfig(alpha=0.5))
+    a = np.array([.65, .05, .05, .05, .05, .05, .05, .05])
+    _feed(bus, 0, [a] * 6)
+    ctl.step(bus, 1)
+    assert ctl.plans[0].n_replicas[0] == ctl.plans[0].n_replicas.max()
+    b = a[::-1].copy()
+    for i in range(2, 12):
+        _feed(bus, 0, [b])
+        ctl.step(bus, i)
+    assert ctl.plans[0].n_replicas[7] == ctl.plans[0].n_replicas.max()
+    assert ctl.swaps >= 1 and ctl.migrated_slots > 0
+
+
+def test_controller_migration_throttle():
+    """max_moves bounds how many replicas a single control step adds."""
+    ctl = AutoscaleController(8, max_pack=2, cfg=ControllerConfig(
+        interval=1, min_observations=1, hysteresis=0.0,
+        migration_weight=0.0, max_moves=2))
+    bus = TelemetryBus(TelemetryConfig(alpha=1.0))
+    flat = np.ones(8) / 8
+    _feed(bus, 0, [flat])
+    ctl.step(bus, 1)
+    base = ctl.plans[0].n_replicas.copy()
+    hot = np.array([.9] + [.1 / 7] * 7)
+    _feed(bus, 0, [hot])
+    ctl.step(bus, 2)
+    after = ctl.plans[0].n_replicas
+    assert int(after[0]) - int(base[0]) <= 2
+    assert ctl.pop_migration() <= 4            # adds + matching sheds
+    assert ctl.pop_migration() == 0            # popped
+
+
+def test_controller_seeded_trace_determinism_end_to_end():
+    """Identical seeded traces through identical controller configs yield
+    identical swap sequences and final plans (pure numpy, no wall clock)."""
+    def run():
+        spec = TraceSpec(kind="drifting_zipf", n_requests=30, seq=16, seed=9)
+        tr = generate_trace(spec, 64)
+        ctl = AutoscaleController(4, max_pack=2, cfg=ControllerConfig(
+            interval=2, min_observations=1))
+        bus = TelemetryBus(TelemetryConfig(alpha=0.4))
+        events = []
+        for i, (tokens, _) in enumerate(tr, 1):
+            pop = np.bincount(tokens % 4, minlength=4).astype(np.float64)
+            _feed(bus, 0, [pop / pop.sum()], n=len(tokens))
+            if ctl.step(bus, i):
+                events.append((i, tuple(ctl.plans[0].n_replicas.tolist())))
+        return events
+    assert run() == run()

@@ -489,6 +489,72 @@ def test_engine_simulate_generates_and_reports_tpot():
     assert not eng.has_work()
 
 
+def _tokens_of(results):
+    return {r.rid: (None if r.tokens is None else r.tokens.tolist())
+            for r in results}
+
+
+def test_engine_plan_swap_mid_decode_is_transparent():
+    """Controller-triggered plan swaps between micro-batches must not
+    change any request's generated tokens: plans move experts across
+    devices, they do not change the math, and decode state (KV cache +
+    rolling path ids) survives the swap untouched."""
+    from repro.sched import AdaptiveScheduler, ControllerConfig
+
+    cfg, ref_server = _smoke_server(capacity_factor=16.0)
+    rng = np.random.RandomState(31)
+    prompts = [rng.randint(0, cfg.vocab_size, (10,)) for _ in range(3)]
+
+    ref_eng = ServingEngine(ref_server, EngineConfig(max_batch_tokens=64))
+    for p in prompts:
+        ref_eng.submit(p, arrival=0.0, max_new_tokens=6)
+    ref = _tokens_of(ref_eng.run())
+
+    _, server = _smoke_server(capacity_factor=16.0)
+    sched = AdaptiveScheduler(server, ControllerConfig(
+        interval=1, min_swap_interval=1, min_observations=1,
+        hysteresis=0.0, migration_weight=0.0))
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=64),
+                        scheduler=sched)
+    for p in prompts:
+        eng.submit(p, arrival=0.0, max_new_tokens=6)
+    results = []
+    swapped_mid_decode = False
+    while eng.has_work():
+        before = sched.controller.swaps + sched.controller.bootstraps
+        results.extend(eng.step(now=0.0))
+        published = sched.controller.swaps + sched.controller.bootstraps
+        if eng.active() and published > before:
+            swapped_mid_decode = True
+    assert swapped_mid_decode            # plans were live while decoding
+    assert server._plan_override         # controller owns layers now
+    assert _tokens_of(results) == ref    # ... and tokens are identical
+    # overridden layers bypass the blocking phase-2 fine-tune entirely
+    post_stats = [s for s in list(eng.layer_stats)[-4 * cfg.n_moe_layers:]]
+    assert not any(s.finetuned for s in post_stats)
+
+
+def test_engine_warmup_pretraces_and_leaves_no_trace():
+    """Warm-up compiles the (batch-bucket, min_replicas) dispatch grid and
+    the prefill/decode paths, restores the PlanCache untouched, and a
+    subsequent same-shape serve hits the jit cache instead of compiling."""
+    cfg, server = _smoke_server(capacity_factor=16.0)
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=64,
+                                             max_batch_requests=4))
+    n = eng.warmup(seqs=(12,), max_new_tokens=3, min_replicas_grid=(1, 2))
+    assert n > 0
+    # no scheduling trace: cache empty, stats zeroed, no overrides
+    assert server.plan_cache._plans == {}
+    st = server.plan_cache.stats
+    assert (st.hits, st.misses, st.invalidations) == (0, 0, 0)
+    assert server._plan_override == {}
+    size = server._dispatch._cache_size()
+    assert size > 0
+    # a second warm-up at the same grid re-traces nothing
+    eng.warmup(seqs=(12,), max_new_tokens=3, min_replicas_grid=(1, 2))
+    assert server._dispatch._cache_size() == size
+
+
 def test_engine_simulate_open_loop_latency():
     cfg, server = _smoke_server()
     rng = np.random.RandomState(3)
