@@ -167,8 +167,12 @@ def _run_variant(variant, cfg, full, params, prof, trace, seq,
         engine.warmup(seqs=(seq,), max_new_tokens=max_new_tokens,
                       min_replicas_grid=(1, 2, 4))
     t0 = time.perf_counter()
-    results = simulate(engine, trace, time_scale=0.0,
-                       max_new_tokens=max_new_tokens)
+    # record (don't gate) steady-state retraces: warmed variants should
+    # drive this to ~0, and the row makes compile stalls visible
+    from repro.analysis.retrace import no_retrace
+    with no_retrace("autoscale simulate window", strict=False) as retr:
+        results = simulate(engine, trace, time_scale=0.0,
+                           max_new_tokens=max_new_tokens)
     wall = time.perf_counter() - t0
     m = summarize_results(results)
     out = {
@@ -179,6 +183,7 @@ def _run_variant(variant, cfg, full, params, prof, trace, seq,
         "plan_reuse": engine.plan_reuse_rate,
         "wall_us_per_req": wall / max(len(results), 1) * 1e6,
         "n_completed": len(results),
+        "retraces": retr.count,
     }
     if scheduler is not None:
         rep = scheduler.report()

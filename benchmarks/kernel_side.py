@@ -165,6 +165,10 @@ def kernels_benchmark(models=tuple(PAPER_MODELS), tokens_per_expert: int = 16,
         record("layer_fwdbwd", name, "xla+scatter", layer_shape, ref_us)
         record("layer_fwdbwd", name, "pallas", layer_shape, pal_us, ref_us)
 
+    # every row carries the analyzer's static VMEM estimate vs the per-core
+    # budget, so measured timings and the pass-1 contract stay in one file
+    from repro.analysis.kernels import annotate_bench_rows
+    annotate_bench_rows(jrows)
     with open(json_path, "w") as fh:
         json.dump(jrows, fh, indent=1)
     rows.append(("kernels/json", 0.0, json_path))

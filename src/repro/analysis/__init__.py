@@ -1,0 +1,50 @@
+"""Static contract checker for the repro codebase (``python -m
+repro.analysis``).
+
+Three passes:
+
+1. :mod:`repro.analysis.kernels` — Pallas kernel contracts: static VMEM
+   footprints at the paper model shapes, MXU/lane tile alignment, un-tiled
+   scaling blocks, grid coverage (AST inventory x call-site registry).
+2. :mod:`repro.analysis.collectives` — mesh collective contracts: axis
+   names bound to :mod:`repro.core.axes`, no axis string literals, no
+   dropped a2a ordering tokens.
+3. :mod:`repro.analysis.retrace` — runtime retracing detector used by the
+   serving-engine warmup test and the autoscale benchmark.
+
+CI runs passes 1-2 against the committed ``ANALYSIS_BASELINE.json``: known
+ceilings stay visible without failing the build; new findings fail it.
+"""
+from repro.analysis.findings import (Finding, load_baseline, new_findings,
+                                     report_dict, sort_findings,
+                                     write_baseline)
+from repro.analysis.collectives import analyze_collectives, canonical_axes
+from repro.analysis.kernels import (REGISTRY, ShapeCase, analyze_kernels,
+                                    annotate_bench_rows, bench_row_vmem,
+                                    build_cases, iter_pallas_sites)
+from repro.analysis.retrace import (RetraceError, RetraceReport, no_retrace,
+                                    supported)
+
+__all__ = [
+    "Finding", "load_baseline", "new_findings", "report_dict",
+    "sort_findings", "write_baseline",
+    "analyze_collectives", "canonical_axes",
+    "REGISTRY", "ShapeCase", "analyze_kernels", "annotate_bench_rows",
+    "bench_row_vmem", "build_cases", "iter_pallas_sites",
+    "RetraceError", "RetraceReport", "no_retrace", "supported",
+    "run_all",
+]
+
+
+def run_all(repo_root: str = ".", *, budget: int | None = None,
+            scales=(1, 4)) -> list:
+    """Passes 1 + 2 over a repo checkout -> sorted findings."""
+    import os
+
+    from repro.kernels.tiling import VMEM_BUDGET_BYTES
+    budget = VMEM_BUDGET_BYTES if budget is None else budget
+    findings = analyze_kernels(
+        os.path.join(repo_root, "src", "repro", "kernels"),
+        budget=budget, scales=scales)
+    findings += analyze_collectives(os.path.join(repo_root, "src", "repro"))
+    return sort_findings(findings)

@@ -1,0 +1,95 @@
+"""CLI for the static contract checker.
+
+    PYTHONPATH=src python -m repro.analysis \
+        --baseline ANALYSIS_BASELINE.json --fail-on-new \
+        --report analysis_report.json
+
+Exit codes: 0 clean / only-baseline findings; 2 new findings with
+``--fail-on-new``.  ``--write-baseline`` accepts the current findings as
+the new baseline (review the diff before committing it).
+``--annotate-bench`` rewrites a BENCH_kernels.json with per-row static
+VMEM estimates vs the budget.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import (load_baseline, new_findings, report_dict,
+                            run_all, write_baseline)
+from repro.analysis.kernels import annotate_bench_rows
+from repro.kernels.tiling import VMEM_BUDGET_BYTES
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--root", default=".",
+                    help="repo root containing src/repro")
+    ap.add_argument("--baseline", default=None,
+                    help="ANALYSIS_BASELINE.json with accepted fingerprints")
+    ap.add_argument("--fail-on-new", action="store_true",
+                    help="exit 2 when findings not in the baseline exist")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings to --baseline and exit")
+    ap.add_argument("--report", default=None,
+                    help="write the full findings report (JSON) here")
+    ap.add_argument("--vmem-budget", type=int, default=VMEM_BUDGET_BYTES,
+                    help="per-core VMEM budget in bytes")
+    ap.add_argument("--scales", default="1,4",
+                    help="comma-separated paper-shape divisors")
+    ap.add_argument("--annotate-bench", default=None,
+                    help="BENCH_kernels.json to annotate with static VMEM "
+                         "estimates (rewritten in place)")
+    args = ap.parse_args(argv)
+
+    scales = tuple(int(s) for s in args.scales.split(","))
+    findings = run_all(args.root, budget=args.vmem_budget, scales=scales)
+
+    if args.annotate_bench:
+        with open(args.annotate_bench) as fh:
+            rows = json.load(fh)
+        annotate_bench_rows(rows, args.vmem_budget)
+        with open(args.annotate_bench, "w") as fh:
+            json.dump(rows, fh, indent=1)
+            fh.write("\n")
+        print(f"annotated {len(rows)} rows in {args.annotate_bench}")
+
+    if args.report:
+        with open(args.report, "w") as fh:
+            json.dump(report_dict(findings, budget=args.vmem_budget), fh,
+                      indent=2)
+            fh.write("\n")
+
+    if args.write_baseline:
+        if not args.baseline:
+            ap.error("--write-baseline requires --baseline")
+        write_baseline(args.baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = load_baseline(args.baseline) if args.baseline else set()
+    fresh = new_findings(findings, baseline)
+    known = len(findings) - len(fresh)
+
+    by_cat: dict[str, int] = {}
+    for f in findings:
+        by_cat[f.category] = by_cat.get(f.category, 0) + 1
+    print(f"repro.analysis: {len(findings)} finding(s) "
+          f"({known} baseline, {len(fresh)} new)  "
+          f"{json.dumps(by_cat, sort_keys=True)}")
+    for f in findings:
+        mark = "NEW " if f.fingerprint in {x.fingerprint for x in fresh} \
+            else "    "
+        print(f"  {mark}[{f.severity:7s}] {f.fingerprint}")
+        print(f"        {f.message}")
+
+    if fresh and args.fail_on_new:
+        print(f"FAIL: {len(fresh)} new finding(s) not in baseline",
+              file=sys.stderr)
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

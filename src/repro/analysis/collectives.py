@@ -1,0 +1,416 @@
+"""Pass 2 — mesh-collective contracts over ``src/repro/``.
+
+Three AST lints:
+
+* ``axis-literal`` — axis-name string literals ("data", "model", ...)
+  anywhere outside ``repro/core/axes.py`` (docstrings exempt).  All axis
+  names must come from the one constants module, so a typo is an
+  ImportError/NameError instead of a silently-unbound collective.
+
+* ``unbound-axis`` — every ``lax.psum`` / ``all_to_all`` / ``axis_index``
+  ... axis argument that the resolver can evaluate statically must name a
+  canonical mesh axis (``repro.core.axes.MESH_AXES``).  Resolution follows
+  constants, tuples, ``axes.X`` attributes, imported axes names, local /
+  module assignments, and function parameters through their in-module call
+  sites (including ``functools.partial``), to a small depth.  Expressions
+  that stay dynamic (e.g. ``mesh.axis_names``-derived tuples) are skipped —
+  combined with the ``axis-literal`` rule they can only ever carry
+  canonical values, which is the invariant this pass enforces.
+
+* ``dropped-ordering-token`` — results of token-producing calls
+  (``pipelined_expert_ffn``-style ``(value, a2a_token)`` pairs) where the
+  ordering token is discarded: the whole call as a bare expression
+  statement, or a tuple-unpack whose token target is ``_``/never read.
+  Dropping the token silently un-orders the backward all-to-all against
+  the DP reduce (the §4 priority schedule).
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.findings import Finding
+from repro.core import axes as _axes_mod
+
+AXES_MODULE = "repro.core.axes"
+
+# collective -> positional index of the axis-name argument
+COLLECTIVES = {
+    "psum": 1, "pmean": 1, "pmax": 1, "pmin": 1, "psum_scatter": 1,
+    "all_to_all": 1, "all_gather": 1, "ppermute": 1,
+    "axis_index": 0, "axis_size": 0,
+}
+_AXIS_KWARG = "axis_name"
+
+# producer function name -> index of the ordering token in its result tuple
+TOKEN_PRODUCERS = {"pipelined_expert_ffn": 1}
+
+_MAX_DEPTH = 3
+
+
+def canonical_axes() -> set:
+    """All scalar axis names exported by repro.core.axes."""
+    vals = set()
+    for name in dir(_axes_mod):
+        if not name.isupper():
+            continue
+        v = getattr(_axes_mod, name)
+        if isinstance(v, str):
+            vals.add(v)
+        elif isinstance(v, tuple):
+            vals.update(x for x in v if isinstance(x, str))
+    return vals
+
+
+def _axes_constants() -> dict:
+    return {name: getattr(_axes_mod, name) for name in dir(_axes_mod)
+            if name.isupper()}
+
+
+# ------------------------------------------------------------ module map --
+
+class _ModuleInfo:
+    """Per-file symbol tables the resolver consults."""
+
+    def __init__(self, tree: ast.Module):
+        self.tree = tree
+        self.module_assigns: dict[str, ast.expr] = {}
+        self.axes_aliases: set[str] = set()       # `axes`, `ax`, ...
+        self.imported_axes: dict[str, object] = {}  # EP_AXIS -> "model"
+        self.functions: dict[str, ast.FunctionDef] = {}
+        consts = _axes_constants()
+        for node in tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                self.module_assigns[node.targets[0].id] = node.value
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == AXES_MODULE:
+                    for a in node.names:
+                        if a.name in consts:
+                            self.imported_axes[a.asname or a.name] = \
+                                consts[a.name]
+                elif node.module == "repro.core":
+                    for a in node.names:
+                        if a.name == "axes":
+                            self.axes_aliases.add(a.asname or "axes")
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == AXES_MODULE:
+                        self.axes_aliases.add(a.asname or "repro")
+        for node in ast.walk(tree):
+            if isinstance(node, ast.FunctionDef):
+                self.functions[node.name] = node
+
+
+def _docstring_nodes(tree: ast.Module) -> set:
+    ids = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Module, ast.FunctionDef,
+                             ast.AsyncFunctionDef, ast.ClassDef)):
+            body = node.body
+            if body and isinstance(body[0], ast.Expr) \
+                    and isinstance(body[0].value, ast.Constant) \
+                    and isinstance(body[0].value.value, str):
+                ids.add(id(body[0].value))
+    return ids
+
+
+# -------------------------------------------------------------- resolver --
+
+class _Unknown(Exception):
+    pass
+
+
+def _local_assigns(fn: ast.FunctionDef) -> dict:
+    out = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name):
+            out[node.targets[0].id] = node.value
+    return out
+
+
+def _param_default(fn: ast.FunctionDef, name: str):
+    args = fn.args
+    pos = args.posonlyargs + args.args
+    n_def = len(args.defaults)
+    for i, a in enumerate(pos):
+        if a.arg == name and i >= len(pos) - n_def:
+            return args.defaults[i - (len(pos) - n_def)]
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if a.arg == name and d is not None:
+            return d
+    return None
+
+
+def _param_index(fn: ast.FunctionDef, name: str) -> int | None:
+    pos = fn.args.posonlyargs + fn.args.args
+    for i, a in enumerate(pos):
+        if a.arg == name:
+            return i
+    return None
+
+
+def _is_param(fn: ast.FunctionDef, name: str) -> bool:
+    args = fn.args
+    return any(a.arg == name for a in
+               args.posonlyargs + args.args + args.kwonlyargs)
+
+
+def _callsite_exprs(info: _ModuleInfo, fn_name: str, param: str,
+                    param_idx: int | None):
+    """(caller_fn_or_None, expr) pairs binding ``param`` at each in-module
+    call of ``fn_name`` — direct calls and functools.partial."""
+    out = []
+    for caller in [None] + list(info.functions.values()):
+        body = info.tree if caller is None else caller
+        for node in ast.walk(body):
+            if not isinstance(node, ast.Call):
+                continue
+            callee, args, kwargs = None, node.args, node.keywords
+            f = node.func
+            if isinstance(f, ast.Name) and f.id == fn_name:
+                callee = fn_name
+            elif isinstance(f, ast.Attribute) and f.attr == fn_name:
+                callee = fn_name
+            elif (isinstance(f, ast.Name) and f.id == "partial"
+                  or isinstance(f, ast.Attribute) and f.attr == "partial"):
+                if args and ((isinstance(args[0], ast.Name)
+                              and args[0].id == fn_name)
+                             or (isinstance(args[0], ast.Attribute)
+                                 and args[0].attr == fn_name)):
+                    callee, args = fn_name, args[1:]
+                    param_idx_here = None  # partial: keywords only
+                else:
+                    continue
+            if callee is None:
+                continue
+            bound = None
+            for kw in kwargs:
+                if kw.arg == param:
+                    bound = kw.value
+            if bound is None and param_idx is not None \
+                    and not (isinstance(f, (ast.Name, ast.Attribute))
+                             and getattr(f, "id", getattr(f, "attr", ""))
+                             == "partial") \
+                    and param_idx < len(args):
+                bound = args[param_idx]
+            if bound is not None:
+                out.append((caller, bound))
+    return out
+
+
+def _resolve(expr, info: _ModuleInfo, fn: ast.FunctionDef | None,
+             depth: int = 0) -> list:
+    """Evaluate an axis expression to its list of axis-name strings.
+    Raises _Unknown for anything dynamic."""
+    if depth > _MAX_DEPTH:
+        raise _Unknown
+    if isinstance(expr, ast.Constant):
+        if isinstance(expr.value, str):
+            return [expr.value]
+        raise _Unknown
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        vals = []
+        for e in expr.elts:
+            vals.extend(_resolve(e, info, fn, depth + 1))
+        return vals
+    if isinstance(expr, ast.Attribute) \
+            and isinstance(expr.value, ast.Name) \
+            and expr.value.id in info.axes_aliases:
+        v = _axes_constants().get(expr.attr)
+        if isinstance(v, str):
+            return [v]
+        if isinstance(v, tuple):
+            return list(v)
+        raise _Unknown
+    if isinstance(expr, ast.Name):
+        name = expr.id
+        if fn is not None:
+            local = _local_assigns(fn)
+            if name in local:
+                return _resolve(local[name], info, fn, depth + 1)
+            default = _param_default(fn, name)
+            if default is not None:
+                return _resolve(default, info, fn, depth + 1)
+            if _is_param(fn, name):
+                sites = _callsite_exprs(info, fn.name, name,
+                                        _param_index(fn, name))
+                if not sites:
+                    raise _Unknown
+                vals = []
+                for caller, bound in sites:
+                    vals.extend(_resolve(bound, info, caller, depth + 1))
+                return vals
+        if name in info.imported_axes:
+            v = info.imported_axes[name]
+            return list(v) if isinstance(v, tuple) else [v]
+        if name in info.module_assigns:
+            return _resolve(info.module_assigns[name], info, None, depth + 1)
+    raise _Unknown
+
+
+# --------------------------------------------------------------- checks ---
+
+def _collective_name(node: ast.Call) -> str | None:
+    f = node.func
+    name = f.attr if isinstance(f, ast.Attribute) else \
+        (f.id if isinstance(f, ast.Name) else None)
+    return name if name in COLLECTIVES else None
+
+
+def _axis_arg(node: ast.Call, name: str):
+    for kw in node.keywords:
+        if kw.arg == _AXIS_KWARG:
+            return kw.value
+    idx = COLLECTIVES[name]
+    return node.args[idx] if idx < len(node.args) else None
+
+
+def _check_collectives(rel: str, info: _ModuleInfo, canon: set) -> list:
+    findings = []
+    containers = [(None, info.tree)] + \
+        [(f, f) for f in info.functions.values()]
+    seen_calls: set[int] = set()
+    for fn, body in containers:
+        for node in ast.walk(body):
+            if not isinstance(node, ast.Call) or id(node) in seen_calls:
+                continue
+            name = _collective_name(node)
+            if name is None:
+                continue
+            # attribute innermost functions to themselves, not enclosing fns
+            owner = fn
+            for g in info.functions.values():
+                if g is not body and any(n is node for n in ast.walk(g)):
+                    owner = g
+            if owner is not fn:
+                continue
+            seen_calls.add(id(node))
+            axis_expr = _axis_arg(node, name)
+            if axis_expr is None:
+                continue
+            try:
+                vals = _resolve(axis_expr, info, fn)
+            except _Unknown:
+                continue
+            bad = sorted(set(v for v in vals if v not in canon))
+            if bad:
+                findings.append(Finding(
+                    "unbound-axis", rel,
+                    fn.name if fn is not None else "<module>",
+                    f"{name}:{','.join(bad)}",
+                    f"{name} at {rel}:{node.lineno} uses axis name(s) "
+                    f"{bad} not bound by any canonical mesh axis "
+                    f"(repro.core.axes.MESH_AXES = {sorted(canon)})",
+                    lineno=node.lineno))
+    return findings
+
+
+def _check_axis_literals(rel: str, tree: ast.Module, canon: set) -> list:
+    doc_ids = _docstring_nodes(tree)
+    findings = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Constant) and isinstance(node.value, str) \
+                and node.value in canon and id(node) not in doc_ids:
+            findings.append(Finding(
+                "axis-literal", rel, "<module>",
+                f"{node.value}@L{0}",
+                f'axis name "{node.value}" appears as a string literal at '
+                f"{rel}:{node.lineno} — import it from repro.core.axes "
+                f"instead so typos fail at import time",
+                lineno=node.lineno))
+    # collapse duplicates of the same literal value per module
+    uniq: dict[str, Finding] = {}
+    for f in findings:
+        uniq.setdefault(f.key, f)
+    return list(uniq.values())
+
+
+def _name_read_after(fn_body, name: str, after_lineno: int) -> bool:
+    for node in ast.walk(fn_body):
+        if isinstance(node, ast.Name) and node.id == name \
+                and isinstance(node.ctx, ast.Load) \
+                and getattr(node, "lineno", 0) >= after_lineno:
+            return True
+    return False
+
+
+def _check_token_drops(rel: str, info: _ModuleInfo,
+                       producers: dict | None = None) -> list:
+    producers = TOKEN_PRODUCERS if producers is None else producers
+
+    def produces(call: ast.Call) -> str | None:
+        f = call.func
+        name = f.attr if isinstance(f, ast.Attribute) else \
+            (f.id if isinstance(f, ast.Name) else None)
+        return name if name in producers else None
+
+    findings = []
+    for fn in info.functions.values():
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+                name = produces(stmt.value)
+                if name:
+                    findings.append(Finding(
+                        "dropped-ordering-token", rel, fn.name,
+                        f"{name}:discarded",
+                        f"{name} result (value, a2a_token) discarded as a "
+                        f"bare statement at {rel}:{stmt.lineno} — the "
+                        f"ordering token must be threaded to "
+                        f"ordered_after/the reduce schedule",
+                        lineno=stmt.lineno))
+            elif isinstance(stmt, ast.Assign) \
+                    and isinstance(stmt.value, ast.Call) \
+                    and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Tuple):
+                name = produces(stmt.value)
+                if not name:
+                    continue
+                tok_i = producers[name]
+                elts = stmt.targets[0].elts
+                if tok_i >= len(elts):
+                    continue
+                tgt = elts[tok_i]
+                if not isinstance(tgt, ast.Name):
+                    continue
+                if tgt.id == "_" or not _name_read_after(
+                        fn, tgt.id, stmt.lineno + 1):
+                    findings.append(Finding(
+                        "dropped-ordering-token", rel, fn.name,
+                        f"{name}:{tgt.id}",
+                        f"{name} ordering token bound to '{tgt.id}' at "
+                        f"{rel}:{stmt.lineno} but never used — the "
+                        f"backward a2a loses its ordering edge",
+                        lineno=stmt.lineno))
+    return findings
+
+
+# ------------------------------------------------------------ entry point
+
+def analyze_collectives(src_root: str, *, rel_prefix: str = "src/repro",
+                        canon: set | None = None,
+                        producers: dict | None = None) -> list:
+    """Run pass 2 over every .py under ``src_root`` (skipping axes.py and
+    this analysis package itself)."""
+    canon = canonical_axes() if canon is None else canon
+    findings = []
+    for dirpath, dirnames, filenames in os.walk(src_root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        if os.path.basename(dirpath) == "analysis":
+            continue
+        for fname in sorted(filenames):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, src_root).replace(os.sep, "/")
+            rel = f"{rel_prefix}/{rel}" if rel_prefix else rel
+            if rel.endswith("core/axes.py"):
+                continue
+            with open(path) as fh:
+                tree = ast.parse(fh.read(), filename=path)
+            info = _ModuleInfo(tree)
+            findings.extend(_check_axis_literals(rel, tree, canon))
+            findings.extend(_check_collectives(rel, info, canon))
+            findings.extend(_check_token_drops(rel, info, producers))
+    return findings

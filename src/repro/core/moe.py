@@ -17,13 +17,12 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import MoEConfig
+from repro.core import axes
 from repro.core import dispatch as D
 from repro.core import microop
+from repro.core.axes import DP_AXES, EP_AXIS
 from repro.core.gating import capacity, router_top_k_gating
 from repro.kernels.ops import grouped_ffn_op, resolve_backend
-
-EP_AXIS = "model"           # expert-parallel mesh axis
-DP_AXES = ("pod", "data")   # data-parallel mesh axes
 
 _DEFAULT_MESH = None
 
@@ -33,7 +32,7 @@ def default_mesh():
     collectives) also runs on a bare CPU — used by smoke tests."""
     global _DEFAULT_MESH
     if _DEFAULT_MESH is None:
-        _DEFAULT_MESH = jax.make_mesh((1, 1), ("data", "model"))
+        _DEFAULT_MESH = jax.make_mesh((1, 1), (axes.DATA, axes.MODEL))
     return _DEFAULT_MESH
 
 
@@ -158,23 +157,22 @@ def moe_layer(mesh, x, params: MoEParams, cfg: MoEConfig, *,
     `tp` mesh axis tensor-slices the expert hidden dim (expert slicing)."""
     if mesh is None:
         mesh = default_mesh()
-    has_pod = "pod" in mesh.axis_names
-    tp = "tp" if "tp" in mesh.axis_names else None
-    dp = ("pod", "data") if has_pod else ("data",)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = axes.TP if axes.TP in mesh.axis_names else None
+    dp = axes.dp_axes(mesh)
+    sizes = axes.axis_sizes(mesh)
     b_, s_, _ = x.shape
     dp_n = 1
     for a in dp:
         dp_n *= sizes.get(a, 1)
     bq = dp if b_ % dp_n == 0 else None
-    sq = "model" if s_ % sizes.get("model", 1) == 0 else None
+    sq = EP_AXIS if s_ % sizes.get(EP_AXIS, 1) == 0 else None
     bspec = P(bq, sq, None)
     hid = ((tp,) if tp else ()) + (dp if fsdp else ())  # hidden-dim shards
     if hid:
-        wspec_i = P("model", None, hid)   # [E->ep, d, f->tp(+dp)]
-        wspec_o = P("model", hid, None)   # [E->ep, f->tp(+dp), d]
+        wspec_i = P(EP_AXIS, None, hid)   # [E->ep, d, f->tp(+dp)]
+        wspec_o = P(EP_AXIS, hid, None)   # [E->ep, f->tp(+dp), d]
     else:
-        wspec_i = wspec_o = P("model", None, None)
+        wspec_i = wspec_o = P(EP_AXIS, None, None)
     body = partial(_moe_shard_body, cfg=cfg, ffn_type=ffn_type,
                    dispatch_backend=dispatch_backend, ep_axis=EP_AXIS,
                    dp_axes=dp, lina=lina, fsdp=fsdp, tp_axis=tp, top_k=top_k)
@@ -182,7 +180,7 @@ def moe_layer(mesh, x, params: MoEParams, cfg: MoEConfig, *,
     wu_spec = wspec_i if has_wu else P()
     wu = params.wu if has_wu else jnp.zeros((), x.dtype)
 
-    aux_axes = (dp if bq else ()) + (("model",) if sq else ())
+    aux_axes = (dp if bq else ()) + ((EP_AXIS,) if sq else ())
 
     def wrapped(x, router, wi, wu, wo):
         wu_ = wu if has_wu else None

@@ -20,6 +20,8 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.configs.base import MoEConfig
+from repro.core import axes
+from repro.core.axes import EP_AXIS
 from repro.core.gating import capacity, router_top_k_gating
 from repro.core.moe import MoEParams, expert_ffn
 from repro.core.placement import PlacementPlan
@@ -98,8 +100,8 @@ def dp_shard_count(mesh, n_tokens: int) -> int:
     the token count does not tile the dp axes)."""
     if mesh is None:
         return 1
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    dp_n = sizes.get("pod", 1) * sizes.get("data", 1)
+    sizes = axes.axis_sizes(mesh)
+    dp_n = sizes.get(axes.POD, 1) * sizes.get(axes.DATA, 1)
     return dp_n if n_tokens % dp_n == 0 else 1
 
 
@@ -211,11 +213,10 @@ def serve_moe_layer(mesh, x, params: MoEParams, cfg: MoEConfig,
     if mesh is None:
         from repro.core.moe import default_mesh
         mesh = default_mesh()
-    has_pod = "pod" in mesh.axis_names
-    dp = ("pod", "data") if has_pod else ("data",)
+    dp = axes.dp_axes(mesh)
     dp_n = dp_shard_count(mesh, x.shape[0])
     bspec = P(dp, None) if dp_n > 1 else P(None, None)
-    wspec = P("model", None, None)
+    wspec = P(EP_AXIS, None, None)
     k = top_k if top_k is not None else max(cfg.top_k, 1)
     has_wu = params.wu is not None
     wu = params.wu if has_wu else jnp.zeros((), x.dtype)
@@ -224,7 +225,7 @@ def serve_moe_layer(mesh, x, params: MoEParams, cfg: MoEConfig,
         plan_arr = PlanArrays(se, ro, nr)
         return _serve_body(x, router, wi, wu_ if has_wu else None, wo,
                            plan_arr, cfg=cfg, ffn_type=ffn_type,
-                           ep_axis="model", top_k=k,
+                           ep_axis=EP_AXIS, top_k=k,
                            min_replicas=min_replicas,
                            cap_override=cap_override)
 

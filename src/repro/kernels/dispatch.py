@@ -23,7 +23,49 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.tiling import block_and_pad, default_interpret
+from repro.kernels.tiling import (VMEM_BUDGET_BYTES, block_and_pad,
+                                  default_interpret)
+
+
+def dispatch_vmem_bytes(t: int, d: int, block_rows: int,
+                        itemsize: int = 4) -> int:
+    """Static per-grid-step VMEM footprint of ``dispatch_rows``.
+
+    The full [T, d] source block is RESIDENT (each output tile gathers from
+    anywhere in it — the PR-4 ceiling tracked by ``repro.analysis`` as an
+    ``untiled-block`` finding); the src/scale index columns and the [br, d]
+    output tile stream through double-buffered.
+    """
+    resident = t * d * itemsize
+    streamed = 2 * (block_rows * 4 + block_rows * 4
+                    + block_rows * d * itemsize)
+    return resident + streamed
+
+
+def combine_vmem_bytes(r: int, d: int, block_t: int, k: int,
+                       itemsize: int = 4) -> int:
+    """Static per-grid-step VMEM footprint of ``combine_rows`` — the full
+    [R, d] slot buffer is resident, token tiles stream double-buffered."""
+    resident = r * d * itemsize
+    streamed = 2 * (block_t * k * 4 + block_t * k * 4
+                    + block_t * d * itemsize)
+    return resident + streamed
+
+
+def _check_vmem(name: str, footprint: int, interpret: bool,
+                vmem_budget: int | None, note: str) -> None:
+    """Fail loudly (with the computed footprint) instead of a silent TPU
+    OOM.  Interpret mode has no VMEM, so the check only fires natively —
+    or whenever the caller pins an explicit ``vmem_budget``."""
+    budget = vmem_budget
+    if budget is None:
+        budget = None if interpret else VMEM_BUDGET_BYTES
+    if budget is not None and footprint > budget:
+        raise ValueError(
+            f"{name}: static VMEM footprint {footprint:,} B exceeds the "
+            f"per-core budget {int(budget):,} B ({note} is resident per "
+            f"grid step — the re-tiling target tracked by repro.analysis; "
+            f"shrink the block or split the call)")
 
 
 def invert_slots(rows, n_rows: int):
@@ -50,9 +92,15 @@ def _dispatch_kernel(src_ref, scale_ref, x_ref, o_ref):
 
 
 def dispatch_rows(x, src_tok, scale=None, *, block_rows: int = 1024,
-                  interpret: bool | None = None):
+                  interpret: bool | None = None,
+                  vmem_budget: int | None = None):
     """x: [T, d]; src_tok: [R] int32 source token per output row (-1 empty);
     scale: optional [R] f32 per-row weight (default 1).  -> [R, d] x.dtype.
+
+    VMEM contract: the whole [T, d] token block is resident (the gather may
+    touch any source row), so T*d*itemsize plus the double-buffered streamed
+    tiles must fit the per-core budget — checked up front via
+    ``dispatch_vmem_bytes`` (raises ValueError instead of a silent TPU OOM).
     """
     if interpret is None:
         interpret = default_interpret()
@@ -61,6 +109,9 @@ def dispatch_rows(x, src_tok, scale=None, *, block_rows: int = 1024,
     if scale is None:
         scale = jnp.ones((r,), jnp.float32)
     br, r_pad = block_and_pad(r, block_rows)
+    _check_vmem("dispatch_rows",
+                dispatch_vmem_bytes(t, d, br, x.dtype.itemsize),
+                interpret, vmem_budget, f"the un-tiled [T={t}, d={d}] block")
     if r_pad != r:
         src_tok = jnp.pad(src_tok, (0, r_pad - r), constant_values=-1)
         scale = jnp.pad(scale, (0, r_pad - r))
@@ -88,15 +139,22 @@ def _combine_kernel(idx_ref, w_ref, buf_ref, o_ref):
 
 
 def combine_rows(buf, rows, weights, *, block_t: int = 1024,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 vmem_budget: int | None = None):
     """buf: [R, d] slot rows; rows: [T, k] int32 flat slot per (token,
     choice), -1 dropped; weights: [T, k] gate weights.  -> [T, d] buf.dtype.
+
+    VMEM contract: the whole [R, d] slot buffer is resident (each token
+    gathers arbitrary slots), checked up front via ``combine_vmem_bytes``.
     """
     if interpret is None:
         interpret = default_interpret()
     r, d = buf.shape
     t, k = rows.shape
     bt, t_pad = block_and_pad(t, block_t)
+    _check_vmem("combine_rows",
+                combine_vmem_bytes(r, d, bt, k, buf.dtype.itemsize),
+                interpret, vmem_budget, f"the un-tiled [R={r}, d={d}] buffer")
     if t_pad != t:
         rows = jnp.pad(rows, ((0, t_pad - t), (0, 0)), constant_values=-1)
         weights = jnp.pad(weights, ((0, t_pad - t), (0, 0)))

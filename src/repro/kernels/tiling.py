@@ -10,9 +10,32 @@ the pad back off.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 LANE = 128     # MXU/VPU lane width — ideal multiple for blocked dims
 SUBLANE = 8    # f32 sublane height — minimum alignment for small extents
+
+# ~16 MB of VMEM per TPU core (v4/v5 class) — the budget every kernel's
+# static per-grid-step footprint is checked against (repro.analysis pass 1,
+# and the call-time asserts in kernels/dispatch.py).
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+# minimum sublane height by dtype width (pallas guide: f32 (8,128),
+# bf16 (16,128), int8/fp8 (32,128))
+_SUBLANE_BY_ITEMSIZE = {4: 8, 2: 16, 1: 32}
+
+
+def sublane_for(dtype) -> int:
+    """Minimum second-to-last-dim tile height for ``dtype``."""
+    return _SUBLANE_BY_ITEMSIZE.get(np.dtype(dtype).itemsize, SUBLANE)
+
+
+def block_bytes(shape, dtype) -> int:
+    """Bytes of one VMEM block of ``shape`` x ``dtype``."""
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n * np.dtype(dtype).itemsize
 
 
 def default_interpret() -> bool:

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.configs import (REGISTRY, SHAPES, V5E, applicable_shapes,
                            get_config, skip_reason)
+from repro.core import axes as ax
 from repro.launch.mesh import (make_production_mesh, arch_mesh, dp_size,
                                ep_size, mesh_context)
 from repro.launch.sharding import (batch_specs, cache_specs, opt_state_specs,
@@ -74,10 +75,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, lina: bool = True,
         kvh = cfg.n_kv_heads
         shp = ((2, 16, kvh, 16 // kvh) if multi_pod
                else (16, kvh, 16 // kvh))
-        axes = (("pod", "data", "model", "tp") if multi_pod
-                else ("data", "model", "tp"))
-        mesh = jsh.Mesh(mesh.devices.reshape(shp), axes,
-                        **axis_types_kwargs(len(axes)))
+        names = ax.MESH_AXES if multi_pod else ax.MESH_AXES[1:]
+        mesh = jsh.Mesh(mesh.devices.reshape(shp), names,
+                        **axis_types_kwargs(len(names)))
     n_chips = mesh.size
     specs = input_specs(cfg, shape)
     if shape.kind == "train":
@@ -120,9 +120,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, lina: bool = True,
                 from repro.models.attention import KVCache
                 from jax.sharding import PartitionSpec as P
                 lead = specs["cache"].kv.k.ndim - 4
-                dpx = ("pod", "data") if multi_pod else ("data",)
+                dpx = ax.DP_AXES if multi_pod else (ax.DATA,)
                 # [.., B->dp, S->tp, KV->model, hd]
-                kv = KVCache(*(P(*(None,) * lead, dpx, "tp", "model", None)
+                kv = KVCache(*(P(*(None,) * lead, dpx, ax.TP, ax.MODEL, None)
                                for _ in range(2)))
                 cspec = cspec._replace(kv=kv)
             if cache_batch_only and cspec.kv is not None:
@@ -131,13 +131,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *, lina: bool = True,
                 from repro.models.attention import KVCache
                 from jax.sharding import PartitionSpec as P
                 lead = specs["cache"].kv.k.ndim - 4
-                dpx = ("pod", "data") if multi_pod else ("data",)
+                dpx = ax.DP_AXES if multi_pod else (ax.DATA,)
                 kv = KVCache(*(P(*(None,) * lead, dpx, None, None, None)
                                for _ in range(2)))
                 cspec = cspec._replace(kv=kv)
             c_shard = shardings_for(mesh, cspec, specs["cache"])
             from jax.sharding import NamedSharding, PartitionSpec as P
-            tok_spec = P(("pod", "data") if multi_pod else ("data",)) \
+            tok_spec = P(ax.DP_AXES if multi_pod else (ax.DATA,)) \
                 if shape.global_batch % dp_size(mesh) == 0 else P(None)
             t_shard = NamedSharding(mesh, tok_spec)
             jitted = jax.jit(step,

@@ -4,6 +4,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.core import axes
+
 
 def mesh_context(mesh):
     """Activate ``mesh`` as the ambient mesh, across JAX versions.
@@ -30,8 +32,9 @@ def axis_types_kwargs(n_axes: int) -> dict:
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
+    names = (axes.POD, axes.DATA, axes.MODEL) if multi_pod \
+        else (axes.DATA, axes.MODEL)
+    return jax.make_mesh(shape, names, **axis_types_kwargs(len(names)))
 
 
 def make_mesh(shape, axes):
@@ -41,19 +44,18 @@ def make_mesh(shape, axes):
 
 
 def dp_size(mesh) -> int:
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    return sizes.get("pod", 1) * sizes.get("data", 1)
+    sizes = axes.axis_sizes(mesh)
+    return sizes.get(axes.POD, 1) * sizes.get(axes.DATA, 1)
 
 
 def ep_size(mesh) -> int:
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    return sizes.get("model", 1)
+    return axes.axis_sizes(mesh).get(axes.MODEL, 1)
 
 
 def tp_axes(mesh):
     """The tensor-parallel axes: `model` plus the expert-slicing `tp` axis
     when present (archs whose expert count < 16)."""
-    return ("model", "tp") if "tp" in mesh.axis_names else ("model",)
+    return axes.mp_axes(mesh)
 
 
 def arch_mesh(cfg, *, multi_pod: bool = False):
@@ -68,8 +70,7 @@ def arch_mesh(cfg, *, multi_pod: bool = False):
         return mesh
     ep, tp = e, 16 // e
     shape = (2, 16, ep, tp) if multi_pod else (16, ep, tp)
-    axes = ("pod", "data", "model", "tp") if multi_pod else \
-        ("data", "model", "tp")
+    names = axes.MESH_AXES if multi_pod else axes.MESH_AXES[1:]
     import jax.sharding as jsh
-    return jsh.Mesh(mesh.devices.reshape(shape), axes,
-                    **axis_types_kwargs(len(axes)))
+    return jsh.Mesh(mesh.devices.reshape(shape), names,
+                    **axis_types_kwargs(len(names)))

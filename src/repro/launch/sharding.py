@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import axes
 from repro.models.attention import AttnParams, KVCache
 from repro.models.lm import (FFNParams, GroupParams, HybridParams, LMCache,
                              LMParams, RWKVStack)
@@ -25,11 +26,11 @@ from repro.optim.adamw import OptState
 
 
 def _dp(mesh):
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return axes.dp_axes(mesh)
 
 
 def _tp(mesh):
-    return ("model", "tp") if "tp" in mesh.axis_names else ("model",)
+    return axes.mp_axes(mesh)
 
 
 def _attn_specs(dp, tp, lead) -> AttnParams:
@@ -85,17 +86,17 @@ def param_specs(cfg: ModelConfig, mesh, params: LMParams) -> LMParams:
     else:
         gp = params.stack
         n_dense = gp.ffn is not None
-        has_tp = "tp" in mesh.axis_names
-        hid = (("tp",) + dp) if has_tp else dp
+        has_tp = axes.TP in mesh.axis_names
+        hid = ((axes.TP,) + dp) if has_tp else dp
         stack = GroupParams(
             attn=_attn_specs(dp, tp, 2),
             ln1=P(None, None, None), ln2=P(None, None, None),
             ffn=_ffn_specs(dp, tp, 2) if n_dense else None,
             moe=type(gp.moe)(
                 router=P(None, dp, None),
-                wi=P(None, "model", None, hid),
-                wu=P(None, "model", None, hid),
-                wo=P(None, "model", hid, None),
+                wi=P(None, axes.EP_AXIS, None, hid),
+                wu=P(None, axes.EP_AXIS, None, hid),
+                wo=P(None, axes.EP_AXIS, hid, None),
             ) if gp.moe is not None else None,
             shared=_ffn_specs(dp, tp, 1) if gp.shared is not None else None,
         )
@@ -135,7 +136,7 @@ def opt_state_specs(param_spec_tree, opt_state: OptState) -> OptState:
 def serve_uses_fsdp(cfg: ModelConfig, mesh, budget_bytes: float = 10e9) -> bool:
     ep = 1
     for a, s in zip(mesh.axis_names, mesh.devices.shape):
-        if a in ("model", "tp"):
+        if a in axes.MP_AXES:
             ep *= s
     return 2.0 * cfg.param_count() / ep > budget_bytes
 
@@ -149,12 +150,12 @@ def serve_param_specs(cfg: ModelConfig, mesh, params: LMParams,
     specs = param_specs(cfg, mesh, params)
     ep = 1
     for a, s in zip(mesh.axis_names, mesh.devices.shape):
-        if a in ("model", "tp"):
+        if a in axes.MP_AXES:
             ep *= s
     per_dev = 2.0 * cfg.param_count() / ep  # bf16 serve weights
     if per_dev > budget_bytes:
         return specs
-    dp_names = {"pod", "data"}
+    dp_names = set(axes.DP_AXES)
 
     def strip(spec):
         if spec is None or not isinstance(spec, P):

@@ -80,9 +80,10 @@ def main(argv=None):
                          dispatch_backend=args.dispatch_backend)
     mesh = None
     if args.mesh:
+        from repro.core import axes
         from repro.launch.mesh import make_mesh
         dp_n, ep_n = (int(x) for x in args.mesh.split("x"))
-        mesh = make_mesh((dp_n, ep_n), ("data", "model"))
+        mesh = make_mesh((dp_n, ep_n), (axes.DATA, axes.MODEL))
     trainer = Trainer(cfg, data_cfg, opt_cfg, tcfg, mesh=mesh)
 
     def log(step, m):

@@ -5,6 +5,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import axes
+
 
 def dense_init(key, shape, scale_axis: int = 0, dtype=jnp.float32):
     scale = shape[scale_axis] ** -0.5
@@ -72,12 +74,10 @@ def constrain(x, mesh, spec: P):
 
 
 def dp_axes(mesh) -> tuple:
-    if mesh is None:
-        return ()
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return axes.dp_axes(mesh)
 
 
 def tp_axes(mesh):
-    if mesh is not None and "tp" in mesh.axis_names:
-        return ("model", "tp")
-    return "model"
+    if mesh is not None and axes.TP in mesh.axis_names:
+        return axes.MP_AXES
+    return axes.MODEL

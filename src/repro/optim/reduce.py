@@ -71,7 +71,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core import microop
+from repro.core import axes, microop
 from repro.optim.compression import (Int8State, compress_int8_ef,
                                      init_int8_state)
 
@@ -128,7 +128,7 @@ def n_chunks_for_bytes(grads, partition_bytes: float) -> int:
 
 def reduce_axes(mesh) -> tuple:
     """The DP mesh axes the gradient reduction runs over."""
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    return axes.dp_axes(mesh)
 
 
 # ---------------------------------------------------------------------------

@@ -550,9 +550,15 @@ def test_engine_warmup_pretraces_and_leaves_no_trace():
     assert server._plan_override == {}
     size = server._dispatch._cache_size()
     assert size > 0
-    # a second warm-up at the same grid re-traces nothing
-    eng.warmup(seqs=(12,), max_new_tokens=3, min_replicas_grid=(1, 2))
+    # a second warm-up at the same grid re-traces nothing: the engine's own
+    # jit-cache accounting AND the analyzer's jit tracing-cache counter
+    # (repro.analysis pass 3) must both stay flat
+    from repro.analysis.retrace import no_retrace, supported
+    with no_retrace("second engine warmup at an identical grid") as rep:
+        eng.warmup(seqs=(12,), max_new_tokens=3, min_replicas_grid=(1, 2))
     assert server._dispatch._cache_size() == size
+    if supported():
+        assert rep.count == 0
 
 
 def test_engine_simulate_open_loop_latency():
