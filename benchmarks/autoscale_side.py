@@ -23,6 +23,11 @@ serving variants:
 
 The acceptance comparison is autoscaled vs the two *static* plans; the
 dynamic re-planner rows quantify what per-batch freshness costs in p95.
+A fifth run per trace repeats the autoscaled variant with
+``route_mode="round_robin"`` — the §5 routing ablation: its
+``replica_imbalance`` column (token-weighted max/mean of the realized
+per-device replica loads) is what the weighted zero-migration split must
+beat on the drifting traces.
 
 Latency methodology: open-loop virtual-clock replay (``engine.simulate``)
 with ``time_scale=0`` and a *modeled* per-step service time from
@@ -48,7 +53,7 @@ import time
 
 import numpy as np
 
-from benchmarks.infer_side import _skewed_smoke
+from benchmarks.infer_side import _replica_imbalance, _skewed_smoke
 from benchmarks.inference_model import InferenceLayerModel
 from repro.configs import TRANSFORMER_XL, with_experts
 from repro.configs.base import A100_IB
@@ -140,13 +145,15 @@ def _early_popularity(stats, n_layers: int, n_experts: int,
 
 
 def _run_variant(variant, cfg, full, params, prof, trace, seq,
-                 max_new_tokens, warm, ctrl_kwargs, static_pop=None):
+                 max_new_tokens, warm, ctrl_kwargs, static_pop=None,
+                 route_mode="weighted"):
     from repro.core.placement import plan_placement
 
     policy = "uniform" if variant == "uniform" else "lina"
     server = MoEServer(cfg, params, prof,
                        ServerConfig(path_len=3, schedule_policy=policy,
-                                    max_pack=MAX_PACK))
+                                    max_pack=MAX_PACK,
+                                    route_mode=route_mode))
     ecfg = EngineConfig(max_batch_tokens=4 * seq, max_batch_requests=8)
     scheduler = None
     if variant == "autoscaled":
@@ -179,6 +186,8 @@ def _run_variant(variant, cfg, full, params, prof, trace, seq,
         "p50_ms": m["latency_p50"] * 1e3, "p95_ms": m["latency_p95"] * 1e3,
         "ttft_p95_ms": m["ttft_p95"] * 1e3,
         "imbalance": _imbalance(engine.layer_stats),
+        "replica_imbalance": _replica_imbalance(engine.layer_stats,
+                                                server.n_dev),
         "finetune_rate": engine.finetune_rate,
         "plan_reuse": engine.plan_reuse_rate,
         "wall_us_per_req": wall / max(len(results), 1) * 1e6,
@@ -240,7 +249,19 @@ def autoscale_benchmark(n_requests=48, seq=32, rate_hz=24.0,
                 f"autoscale/{tname}-{variant}", r["wall_us_per_req"],
                 f"p50_ms={r['p50_ms']:.1f},p95_ms={r['p95_ms']:.1f},"
                 f"imbalance={r['imbalance']:.2f},"
+                f"replica_imbalance={r['replica_imbalance']:.2f},"
                 f"finetune_rate={r['finetune_rate']:.2f}{extra}"))
+        # §5 routing ablation: the same autoscaled stack with positional
+        # round-robin replica splits — isolates what the realized-histogram
+        # weighted routing buys at zero migration cost
+        r_rr, _ = _run_variant("autoscaled", cfg, full, params, prof, trace,
+                               seq, max_new_tokens, warm, ctrl_kwargs,
+                               route_mode="round_robin")
+        res["autoscaled-roundrobin"] = r_rr
+        rows.append((f"autoscale/{tname}-autoscaled-roundrobin",
+                     r_rr["wall_us_per_req"],
+                     f"p95_ms={r_rr['p95_ms']:.1f},"
+                     f"replica_imbalance={r_rr['replica_imbalance']:.2f}"))
         auto, stat, uni = res["autoscaled"], res["lina-static"], res["uniform"]
         verdict = {
             "p95_beats_static_uniform": auto["p95_ms"] < uni["p95_ms"],
@@ -249,6 +270,8 @@ def autoscale_benchmark(n_requests=48, seq=32, rate_hz=24.0,
                 auto["imbalance"] < uni["imbalance"],
             "imbalance_beats_static_lina":
                 auto["imbalance"] < stat["imbalance"],
+            "replica_imbalance_weighted_beats_rr":
+                auto["replica_imbalance"] < r_rr["replica_imbalance"],
         }
         rows.append((f"autoscale/{tname}-verdict", 0.0,
                      ",".join(f"{k}={v}" for k, v in verdict.items())))

@@ -56,6 +56,27 @@ def _skewed_smoke(base, n_experts: int, seed=0, skew=2.0):
     return cfg, params._replace(stack=stack)
 
 
+def _replica_imbalance(stats, n_dev: int) -> float:
+    """Token-weighted max/mean imbalance of the REALIZED per-device replica
+    routing (``LayerStats.replica_load`` aggregated to devices) — the §5
+    weighted-split objective as observed post-routing, where device_load
+    measures what the plan could do at best.  Weighted routing pushes this
+    toward 1.0 on replicated placements; round-robin splits evenly per
+    expert and eats whatever co-location skew the plan has."""
+    num = den = 0.0
+    for s in stats:
+        rep = getattr(s, "replica_load", None)
+        if rep is None:
+            continue
+        dev = np.asarray(rep, np.float64).reshape(n_dev, -1).sum(1)
+        if dev.sum() <= 0:
+            continue
+        w = max(s.n_tokens, 1)
+        num += w * float(dev.max() / max(dev.mean(), 1e-12))
+        den += w
+    return num / den if den else 0.0
+
+
 def _serve_times(cfg, params, scfg: ServerConfig, batches, seq,
                  profile_batches=4, full_cfg=None):
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq, global_batch=4,
@@ -70,12 +91,14 @@ def _serve_times(cfg, params, scfg: ServerConfig, batches, seq,
                              3 if fc.ffn_type == "swiglu" else 2,
                              server.n_dev, hw=A100_IB)
     times, ideals, fts, accs = [], [], [], []
+    all_stats = []
     wall = 0.0
     for b in range(batches):
         batch = ds.batch(500 + b)
         t0 = time.perf_counter()
         _, stats = server.serve(batch["tokens"])
         wall += time.perf_counter() - t0
+        all_stats += stats
         n_tok = MODEL_TOKENS
         t = sum(lm.layer_time(
             n_tok, s.device_load.max(), finetuned=s.finetuned,
@@ -92,6 +115,7 @@ def _serve_times(cfg, params, scfg: ServerConfig, batches, seq,
         "p95": float(np.percentile(norm, 95)),
         "finetune_rate": float(np.mean(fts)),
         "accuracy": float(np.mean(accs)),
+        "replica_imbalance": _replica_imbalance(all_stats, server.n_dev),
         "wall_us": wall / batches * 1e6,
     }
 
@@ -123,7 +147,8 @@ def fig16_inference_time(batches=8, seq=64):
                 f"lina_norm_median={res['lina']['median']:.2f},"
                 f"noest_norm_median={res['no-estimation']['median']:.2f},"
                 f"noft_norm_p95={res['no-finetune']['p95']:.2f},"
-                f"finetune_rate={res['lina']['finetune_rate']:.2f}"))
+                f"finetune_rate={res['lina']['finetune_rate']:.2f},"
+                f"replica_imb={res['lina']['replica_imbalance']:.2f}"))
     return rows
 
 
@@ -198,7 +223,9 @@ def traffic_skewed_bursty(n_requests=24, seq=48, rate_hz=20.0,
             f"gen_tok_s={m['gen_tok_s']:.1f},"
             f"plan_reuse={engine.plan_reuse_rate:.2f},"
             f"finetune_rate={engine.finetune_rate:.2f},"
-            f"max_load={np.mean(loads):.3f}"))
+            f"max_load={np.mean(loads):.3f},"
+            f"replica_imb="
+            f"{_replica_imbalance(engine.layer_stats, server.n_dev):.2f}"))
     return rows
 
 

@@ -28,14 +28,14 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.configs import BERT2GPT2, GPT2_MOE, TRANSFORMER_XL
+from repro.configs import BERT2GPT2, BERT_LARGE, GPT2_MOE, TRANSFORMER_XL
 from repro.core import dispatch as D
 from repro.core import init_moe_params, moe_layer
 from repro.core.gating import capacity, top_k_gating
 from repro.kernels import ops as K
 
 PAPER_MODELS = {"transformer-xl": TRANSFORMER_XL, "gpt2": GPT2_MOE,
-                "bert2gpt2": BERT2GPT2}
+                "bert2gpt2": BERT2GPT2, "bert-large": BERT_LARGE}
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 JSON_PATH = os.path.join(REPO_ROOT, "BENCH_kernels.json")
 
@@ -122,6 +122,28 @@ def kernels_benchmark(models=tuple(PAPER_MODELS), tokens_per_expert: int = 16,
         pal_us = _time_us(roundtrip("pallas"), x, g, iters=iters)
         record("dispatch_combine", name, "oracle", buf_shape, ref_us)
         record("dispatch_combine", name, "pallas", buf_shape, pal_us, ref_us)
+
+        # --- weighted replica routing (fused positions + bin split) --------
+        # the serving-side §5 split: priority positions + weighted replica
+        # bins, xla-ref vs fused kernels on the gating output above
+        r_w = 4
+        slot_cap = max(8, -(-cap // r_w))
+        cumw = jnp.cumsum(jnp.full((e, r_w), slot_cap, jnp.int32),
+                          axis=1).astype(jnp.int32)
+        slot_of = jnp.arange(e * r_w, dtype=jnp.int32).reshape(e, r_w)
+        route_shape = {"T": t, "E": e, "k": k, "R": r_w}
+
+        def route(use):
+            def fn(ix):
+                pos = K.topk_positions_op(ix, e, use_pallas=use)
+                return K.weighted_route_op(ix, pos, cumw, slot_of, slot_cap,
+                                           use_pallas=use)
+            return fn
+
+        ref_us = _time_us(route(False), g.expert_idx, iters=iters)
+        pal_us = _time_us(route(True), g.expert_idx, iters=iters)
+        record("routing", name, "oracle", route_shape, ref_us)
+        record("routing", name, "pallas", route_shape, pal_us, ref_us)
 
         # --- grouped expert FFN --------------------------------------------
         xg = jax.random.normal(key[2], (e, tokens_per_expert, d)) * 0.3

@@ -4,9 +4,12 @@
         --baseline ANALYSIS_BASELINE.json --fail-on-new \
         --report analysis_report.json
 
-Exit codes: 0 clean / only-baseline findings; 2 new findings with
-``--fail-on-new``.  ``--write-baseline`` accepts the current findings as
-the new baseline (review the diff before committing it).
+Exit codes: 0 clean / only-baseline findings; 2 with ``--fail-on-new``
+when findings outside the baseline exist OR when baseline entries are
+stale (fingerprints no longer produced — fixed findings must be removed
+from the baseline so it only shrinks deliberately).  ``--write-baseline``
+accepts the current findings as the new baseline (review the diff before
+committing it).
 ``--annotate-bench`` rewrites a BENCH_kernels.json with per-row static
 VMEM estimates vs the budget.
 """
@@ -29,7 +32,8 @@ def main(argv=None):
     ap.add_argument("--baseline", default=None,
                     help="ANALYSIS_BASELINE.json with accepted fingerprints")
     ap.add_argument("--fail-on-new", action="store_true",
-                    help="exit 2 when findings not in the baseline exist")
+                    help="exit 2 when findings not in the baseline exist, "
+                         "or when baseline entries have gone stale")
     ap.add_argument("--write-baseline", action="store_true",
                     help="write current findings to --baseline and exit")
     ap.add_argument("--report", default=None,
@@ -71,22 +75,32 @@ def main(argv=None):
     baseline = load_baseline(args.baseline) if args.baseline else set()
     fresh = new_findings(findings, baseline)
     known = len(findings) - len(fresh)
+    stale = sorted(baseline - {f.fingerprint for f in findings})
 
     by_cat: dict[str, int] = {}
     for f in findings:
         by_cat[f.category] = by_cat.get(f.category, 0) + 1
     print(f"repro.analysis: {len(findings)} finding(s) "
-          f"({known} baseline, {len(fresh)} new)  "
+          f"({known} baseline, {len(fresh)} new, {len(stale)} stale)  "
           f"{json.dumps(by_cat, sort_keys=True)}")
     for f in findings:
         mark = "NEW " if f.fingerprint in {x.fingerprint for x in fresh} \
             else "    "
         print(f"  {mark}[{f.severity:7s}] {f.fingerprint}")
         print(f"        {f.message}")
+    for fp in stale:
+        print(f"  STALE {fp}")
+        print("        baseline entry no longer produced — the finding was "
+              "fixed; remove it from the baseline")
 
-    if fresh and args.fail_on_new:
-        print(f"FAIL: {len(fresh)} new finding(s) not in baseline",
-              file=sys.stderr)
+    if args.fail_on_new and (fresh or stale):
+        if fresh:
+            print(f"FAIL: {len(fresh)} new finding(s) not in baseline",
+                  file=sys.stderr)
+        if stale:
+            print(f"FAIL: {len(stale)} stale baseline entr"
+                  f"{'y' if len(stale) == 1 else 'ies'} — shrink the "
+                  f"baseline to match", file=sys.stderr)
         return 2
     return 0
 

@@ -21,7 +21,8 @@ Hybrid AST + call-site registry:
     extent, nor a multiple of the lane/sublane tile for their dtype;
   - ``untiled-block``: blocks covering the full extent of a dim that scales
     with tokens (T), dispatch rows (R = E*C) or a contraction (K) — the
-    PR-4 VMEM ceilings become named, baseline-tracked findings here;
+    PR-4 VMEM ceilings surfaced here until the dispatch/combine/matmul
+    kernels were re-tiled (this check now guards against regressions);
   - ``grid-uncovered``: affine index maps whose tile x grid-steps product
     does not cover the padded array extent (or const-indexed dims smaller
     than the array — regions the kernel would silently never visit).
@@ -41,8 +42,9 @@ from repro.configs.paper_models import (BERT2GPT2, BERT_LARGE, GPT2_MOE,
                                         TRANSFORMER_XL)
 from repro.core.gating import capacity
 from repro.kernels.dispatch import combine_vmem_bytes, dispatch_vmem_bytes
-from repro.kernels.tiling import (LANE, VMEM_BUDGET_BYTES, block_and_pad,
-                                  block_bytes, sublane_for)
+from repro.kernels.tiling import (LANE, SUBLANE, VMEM_BUDGET_BYTES,
+                                  block_and_pad, block_bytes, pad_to,
+                                  sublane_for)
 
 PAPER_MODELS = (TRANSFORMER_XL, GPT2_MOE, BERT2GPT2, BERT_LARGE)
 
@@ -236,44 +238,93 @@ def _eval_topk_gating(c: ShapeCase):
 
 def _eval_dispatch_rows(c: ShapeCase):
     br, r_pad = block_and_pad(c.R, 1024)
+    bx, t_pad = block_and_pad(c.T, 512)
     ev = SiteEval(
-        "dispatch.py", "dispatch_rows", c.name, (r_pad // br,),
+        "dispatch.py", "dispatch_rows", c.name,
+        (r_pad // br, t_pad // bx),
         inputs=[
             Block("src_tok", (br, 1), "int32", (grid_dim(0), CONST),
                   (r_pad, 1)),
             Block("scale", (br, 1), "float32", (grid_dim(0), CONST),
                   (r_pad, 1)),
-            Block("x", (c.T, c.D), "float32", (CONST, CONST), (c.T, c.D),
-                  roles={0: "T"}),
+            Block("x", (bx, c.D), "float32", (grid_dim(1), CONST),
+                  (t_pad, c.D)),
         ],
         outputs=[
             Block("out", (br, c.D), "float32", (grid_dim(0), CONST),
                   (r_pad, c.D)),
         ])
-    assert ev.footprint() == dispatch_vmem_bytes(c.T, c.D, br), \
+    assert ev.footprint() == dispatch_vmem_bytes(br, bx, c.D), \
         "analyzer estimate diverged from kernels.dispatch.dispatch_vmem_bytes"
     return [ev]
 
 
 def _eval_combine_rows(c: ShapeCase):
     bt, t_pad = block_and_pad(c.T, 1024)
+    brf, r_pad = block_and_pad(c.R, 512)
     ev = SiteEval(
-        "dispatch.py", "combine_rows", c.name, (t_pad // bt,),
+        "dispatch.py", "combine_rows", c.name,
+        (t_pad // bt, r_pad // brf),
         inputs=[
             Block("rows", (bt, c.K), "int32", (grid_dim(0), CONST),
                   (t_pad, c.K)),
             Block("weights", (bt, c.K), "float32", (grid_dim(0), CONST),
                   (t_pad, c.K)),
-            Block("buf", (c.R, c.D), "float32", (CONST, CONST), (c.R, c.D),
-                  roles={0: "R"}),
+            Block("buf", (brf, c.D), "float32", (grid_dim(1), CONST),
+                  (r_pad, c.D)),
         ],
         outputs=[
             Block("out", (bt, c.D), "float32", (grid_dim(0), CONST),
                   (t_pad, c.D)),
         ])
-    assert ev.footprint() == combine_vmem_bytes(c.R, c.D, bt, c.K), \
+    assert ev.footprint() == combine_vmem_bytes(bt, brf, c.D, c.K), \
         "analyzer estimate diverged from kernels.dispatch.combine_vmem_bytes"
     return [ev]
+
+
+# the weighted replica split keeps only metadata resident: the [E, R]
+# integer-cumsum weight table and the replica->slot map.  R here is the
+# replica-table width — bounded by the device count; 64 is a conservative
+# upper bound for the paper's largest testbed.
+ROUTE_REPLICA_W = 64
+
+
+def _eval_weighted_route(c: ShapeCase):
+    bt, t_pad = block_and_pad(c.T, 1024)
+    rw = ROUTE_REPLICA_W
+    return [SiteEval(
+        "dispatch.py", "weighted_route", c.name, (t_pad // bt,),
+        inputs=[
+            Block("expert_idx", (bt, c.K), "int32", (grid_dim(0), CONST),
+                  (t_pad, c.K)),
+            Block("position", (bt, c.K), "int32", (grid_dim(0), CONST),
+                  (t_pad, c.K)),
+            Block("cum_weights", (c.E, rw), "int32", (CONST, CONST),
+                  (c.E, rw)),
+            Block("slot_of", (c.E, rw), "int32", (CONST, CONST),
+                  (c.E, rw)),
+        ],
+        outputs=[
+            Block("rows", (bt, c.K), "int32", (grid_dim(0), CONST),
+                  (t_pad, c.K)),
+        ])]
+
+
+def _eval_topk_positions(c: ShapeCase):
+    bt, t_pad = block_and_pad(c.T, 1024)
+    e_pad = pad_to(max(c.E, 1), LANE)
+    return [SiteEval(
+        "topk_gating.py", "topk_positions", c.name, (c.K, t_pad // bt),
+        inputs=[
+            Block("idx", (bt, 1), "int32", (grid_dim(1), grid_dim(0)),
+                  (t_pad, c.K)),
+        ],
+        outputs=[
+            Block("pos", (bt, 1), "int32", (grid_dim(1), grid_dim(0)),
+                  (t_pad, c.K)),
+            Block("cnt", (SUBLANE, e_pad), "int32", (CONST, CONST),
+                  (SUBLANE, e_pad)),
+        ])]
 
 
 def _eval_grouped_ffn(c: ShapeCase):
@@ -300,10 +351,11 @@ def _eval_grouped_ffn(c: ShapeCase):
 
 # the grouped-FFN backward (kernels/ops.py::_grouped_ffn_bwd) expresses
 # every dgrad/wgrad as a grouped_matmul; these are its gelu-path GEMM
-# shapes, each with the full contraction dim resident in the blocks
+# shapes.  The contraction dim is tiled (grid axis 3, innermost) with the
+# output block revisited and accumulated — no full-K resident block.
 _GMM_VARIANTS = (
     ("recompute_h", "C", "D", "F"),   # h  = x    @ wi
-    ("dgrad_x", "C", "F", "D"),       # dx = dh   @ wi.T   (K = F: the ceiling)
+    ("dgrad_x", "C", "F", "D"),       # dx = dh   @ wi.T
     ("wgrad_in", "D", "C", "F"),      # dwi = x.T @ dh
     ("wgrad_out", "F", "C", "D"),     # dwo = act.T @ dy
 )
@@ -316,16 +368,17 @@ def _eval_grouped_matmul(c: ShapeCase):
         m, k, n = dims[m_r], dims[k_r], dims[n_r]
         bm, m_pad = block_and_pad(m, 256)
         bn, n_pad = block_and_pad(n, 512, sub=LANE)
+        bk, k_pad = block_and_pad(k, 512, sub=LANE)
         evs.append(SiteEval(
             "moe_ffn.py", "grouped_matmul", c.name,
-            (c.E, m_pad // bm, n_pad // bn),
+            (c.E, m_pad // bm, n_pad // bn, k_pad // bk),
             inputs=[
-                Block("a", (1, bm, k), "float32",
-                      (grid_dim(0), grid_dim(1), CONST), (c.E, m_pad, k),
-                      roles={2: "K"}),
-                Block("b", (1, k, bn), "float32",
-                      (grid_dim(0), CONST, grid_dim(2)), (c.E, k, n_pad),
-                      roles={1: "K"}),
+                Block("a", (1, bm, bk), "float32",
+                      (grid_dim(0), grid_dim(1), grid_dim(3)),
+                      (c.E, m_pad, k_pad)),
+                Block("b", (1, bk, bn), "float32",
+                      (grid_dim(0), grid_dim(3), grid_dim(2)),
+                      (c.E, k_pad, n_pad)),
             ],
             outputs=[
                 Block("out", (1, bm, bn), "float32",
@@ -404,8 +457,11 @@ class RegistryEntry:
 REGISTRY = {
     ("topk_gating.py", "topk_gating_fused"):
         RegistryEntry(_eval_topk_gating),
+    ("topk_gating.py", "topk_positions"):
+        RegistryEntry(_eval_topk_positions),
     ("dispatch.py", "dispatch_rows"): RegistryEntry(_eval_dispatch_rows),
     ("dispatch.py", "combine_rows"): RegistryEntry(_eval_combine_rows),
+    ("dispatch.py", "weighted_route"): RegistryEntry(_eval_weighted_route),
     ("moe_ffn.py", "grouped_ffn"): RegistryEntry(_eval_grouped_ffn),
     ("moe_ffn.py", "grouped_matmul"): RegistryEntry(_eval_grouped_matmul),
     ("flash_attention.py", "flash_attention"):
@@ -601,6 +657,9 @@ def bench_row_vmem(row: dict) -> int | None:
                         C=shape["C"], R=shape["E"] * shape["C"],
                         K=shape.get("k", 2))
         evs += _eval_dispatch_rows(c) + _eval_combine_rows(c)
+    elif kind == "routing":
+        c = _bench_case(T=shape["T"], E=shape["E"], K=shape.get("k", 2))
+        evs += _eval_topk_positions(c) + _eval_weighted_route(c)
     elif kind == "grouped_ffn":
         # the bench's T is already the per-expert row count
         c = _bench_case(E=shape["E"], C=shape["T"], D=shape["D"],
@@ -612,9 +671,9 @@ def bench_row_vmem(row: dict) -> int | None:
         cap = capacity(t, e, k, 1.25)
         c = _bench_case(T=t, D=shape["D"], F=shape["F"], E=e, K=k,
                         C=cap, R=e * cap)
-        evs += (_eval_topk_gating(c) + _eval_dispatch_rows(c)
-                + _eval_combine_rows(c) + _eval_grouped_ffn(c)
-                + _eval_grouped_matmul(c))
+        evs += (_eval_topk_gating(c) + _eval_topk_positions(c)
+                + _eval_dispatch_rows(c) + _eval_combine_rows(c)
+                + _eval_grouped_ffn(c) + _eval_grouped_matmul(c))
     else:
         return None
     return max(ev.footprint() for ev in evs)

@@ -32,12 +32,16 @@ def capacity(n_tokens: int, n_experts: int, top_k: int,
 
 def gating_from_topk(expert_idx: jax.Array, gate_w: jax.Array,
                      probs: jax.Array, cap: int,
-                     aux_loss_weight: float = 0.01) -> GatingResult:
+                     aux_loss_weight: float = 0.01,
+                     position: jax.Array | None = None) -> GatingResult:
     """Shared capacity/position/aux epilogue: turn raw top-k picks
     (idx [T,k], renormalized weights [T,k], full probs [T,E]) into the
     complete dispatch metadata.  Both the XLA gating path and the fused
     Pallas kernel (``kernels.ops.topk_gating_op``) feed this, so they agree
     exactly on slots, drops and the aux loss.
+
+    ``position`` may be precomputed (the fused ``topk_positions`` kernel on
+    the pallas path); when None the [T, k, E] one-hot cumsum runs here.
     """
     n_tokens, n_experts = probs.shape
     top_k = expert_idx.shape[1]
@@ -48,14 +52,17 @@ def gating_from_topk(expert_idx: jax.Array, gate_w: jax.Array,
     p_e = jnp.mean(probs, axis=0)
     aux = aux_loss_weight * n_experts * jnp.sum(f_e * p_e)
 
-    # Capacity slots: flatten the k choices in priority order (all tokens'
-    # 1st choice before any 2nd choice, GShard-style) so top-1 wins slots.
-    onehot = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.int32)  # [T,k,E]
-    flat = onehot.transpose(1, 0, 2).reshape(top_k * n_tokens, n_experts)
-    pos_flat = jnp.cumsum(flat, axis=0) - flat                   # pos in expert
-    pos = (pos_flat.reshape(top_k, n_tokens, n_experts)
-           .transpose(1, 0, 2))                                  # [T,k,E]
-    position = jnp.sum(pos * onehot, axis=-1)                    # [T, k]
+    if position is None:
+        # Capacity slots: flatten the k choices in priority order (all
+        # tokens' 1st choice before any 2nd choice, GShard-style) so top-1
+        # wins slots.
+        onehot = jax.nn.one_hot(expert_idx, n_experts,
+                                dtype=jnp.int32)                 # [T,k,E]
+        flat = onehot.transpose(1, 0, 2).reshape(top_k * n_tokens, n_experts)
+        pos_flat = jnp.cumsum(flat, axis=0) - flat           # pos in expert
+        pos = (pos_flat.reshape(top_k, n_tokens, n_experts)
+               .transpose(1, 0, 2))                              # [T,k,E]
+        position = jnp.sum(pos * onehot, axis=-1)                # [T, k]
     dropped = position >= cap
 
     gate_w = jnp.where(dropped, 0.0, gate_w)
@@ -98,4 +105,8 @@ def router_top_k_gating(x: jax.Array, router: jax.Array, top_k: int,
     from repro.kernels import ops as kernel_ops
     idx, gate_w, probs = kernel_ops.topk_gating_op(x, router, top_k,
                                                    use_pallas=True)
-    return gating_from_topk(idx, gate_w, probs, cap, aux_loss_weight)
+    # the capacity/position cumsum is fused too: no [T, k, E] one-hot in HBM
+    position = kernel_ops.topk_positions_op(idx, probs.shape[-1],
+                                            use_pallas=True)
+    return gating_from_topk(idx, gate_w, probs, cap, aux_loss_weight,
+                            position=position)

@@ -233,6 +233,38 @@ def plan_from_replicas(popularity: np.ndarray, replica_counts: np.ndarray,
     return PlacementPlan(slot_expert, rep, n_rep, pop.astype(np.float32))
 
 
+def route_weights(plan: PlacementPlan, rounds: int = 6) -> np.ndarray:
+    """Per-(expert, replica) routing fractions that balance modeled
+    per-DEVICE token load under the plan's popularity — the starting point
+    of the §5 weighted zero-migration split (``serving.PlanArrays``).
+
+    Round-robin gives every replica of an expert 1/r of its tokens, so a
+    replica that shares its device with other hot experts still eats the
+    straggler.  A few rounds of iterative proportional fitting fix that:
+    start uniform over live replicas, compute each device's modeled load
+    (sum over hosted replicas of weight * expert popularity), and divide
+    every replica's weight by its device's relative load, renormalizing
+    per expert.  Rows sum to 1 over live replicas; pad/dead columns are 0.
+    """
+    ro = np.asarray(plan.replica_of, np.int64)
+    nr = np.asarray(plan.n_replicas, np.int64)
+    e, r_w = ro.shape
+    pop = np.asarray(plan.popularity, np.float64)
+    pop = pop / max(pop.sum(), 1e-12)
+    live = (np.arange(r_w)[None, :] < np.clip(nr, 1, r_w)[:, None]) \
+        & (ro >= 0)
+    dev = np.clip(ro, 0, None) // max(plan.max_pack, 1)          # [E, R]
+    n_live = np.maximum(live.sum(1, keepdims=True), 1)
+    w = np.where(live, 1.0 / n_live, 0.0)
+    for _ in range(max(0, int(rounds))):
+        load = np.zeros(plan.n_devices, np.float64)
+        np.add.at(load, dev[live], (w * pop[:, None])[live])
+        rel = load / max(load.mean(), 1e-12)
+        w = np.where(live, w / np.maximum(rel[dev], 1e-6), 0.0)
+        w = w / np.maximum(w.sum(1, keepdims=True), 1e-12)
+    return w.astype(np.float32)
+
+
 def transfer_balance_cost(plan: PlacementPlan,
                           popularity: np.ndarray) -> float:
     """The §5 objective the controller minimizes: the *maximum* per-device

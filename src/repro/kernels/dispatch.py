@@ -1,5 +1,6 @@
-"""Fused dispatch/combine Pallas kernels: scatter tokens into per-expert
-capacity buffers and gather them back gate-weighted, in one pass each.
+"""Fused dispatch/combine/route Pallas kernels: scatter tokens into
+per-expert capacity buffers, gather them back gate-weighted, and map
+(token, choice) pairs onto weighted replica rows — one pass each.
 
 Neither side materializes the [T, E, C] one-hot dispatch mask (the einsum
 oracle) nor the [T*k, d] broadcast copy of the token block (the jnp scatter
@@ -7,17 +8,32 @@ backend).  Instead the host-side caller inverts the metadata-sized
 (token -> slot) map into a (slot -> token) int32 index (``invert_slots``,
 one O(E*C) scatter of ids, no feature data), and:
 
-  * ``dispatch_rows``  — grid over output-row tiles; each tile gathers its
-    source rows straight out of the VMEM-resident token block and applies an
-    optional per-row scale (scale also serves the combine-backward, where
-    the scattered rows are gate-weighted cotangents).
-  * ``combine_rows``   — grid over token tiles; each token gathers its k
-    slot rows from the VMEM-resident buffer and reduces them with the gate
-    weights in fp32.
+  * ``dispatch_rows``  — grid over (output-row tile, source tile); each
+    output tile is revisited across the streamed source tiles, gathering the
+    rows that live in the current tile and accumulating (rows outside the
+    tile contribute exactly 0.0, so the result is bitwise the single-pass
+    gather).  An optional per-row scale also serves the combine-backward,
+    where the scattered rows are gate-weighted cotangents.
+  * ``combine_rows``   — grid over (token tile, buffer tile); each token
+    tile is revisited across the streamed slot-buffer tiles and reduces its
+    k gate-weighted slot rows in fp32.
+  * ``weighted_route`` — grid over token tiles; the per-(expert, replica)
+    integer routing weights (cumsum form) and the replica->slot table stay
+    VMEM-resident while each tile turns (expert, position) into a flat
+    destination row via bin partition — the Lina §5/§6.2 weighted
+    zero-migration replica split, fused so dispatch metadata never leaves
+    VMEM.
+
+Since this PR no kernel here keeps a T- or R-scaling block resident: the
+PR-4 ``untiled-block`` / scale-1 ``vmem-over-budget`` ceilings tracked in
+``ANALYSIS_BASELINE.json`` are retired, and the call-time asserts below
+enforce the new (all-streamed) footprints.
 
 Empty slots / dropped choices are index -1 and come out exactly zero.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -27,29 +43,25 @@ from repro.kernels.tiling import (VMEM_BUDGET_BYTES, block_and_pad,
                                   default_interpret)
 
 
-def dispatch_vmem_bytes(t: int, d: int, block_rows: int,
+def dispatch_vmem_bytes(block_rows: int, block_src: int, d: int,
                         itemsize: int = 4) -> int:
     """Static per-grid-step VMEM footprint of ``dispatch_rows``.
 
-    The full [T, d] source block is RESIDENT (each output tile gathers from
-    anywhere in it — the PR-4 ceiling tracked by ``repro.analysis`` as an
-    ``untiled-block`` finding); the src/scale index columns and the [br, d]
-    output tile stream through double-buffered.
-    """
-    resident = t * d * itemsize
-    streamed = 2 * (block_rows * 4 + block_rows * 4
-                    + block_rows * d * itemsize)
-    return resident + streamed
+    Everything streams double-buffered: the src/scale index columns and the
+    fp32 [br, d] output tile per output step, plus the [bx, d] source tile
+    per source step — no block scales with the full T extent any more (the
+    PR-4 ``untiled-block`` ceiling, now retired)."""
+    return 2 * (block_rows * 4 + block_rows * 4
+                + block_src * d * itemsize + block_rows * d * 4)
 
 
-def combine_vmem_bytes(r: int, d: int, block_t: int, k: int,
+def combine_vmem_bytes(block_t: int, block_r: int, d: int, k: int,
                        itemsize: int = 4) -> int:
-    """Static per-grid-step VMEM footprint of ``combine_rows`` — the full
-    [R, d] slot buffer is resident, token tiles stream double-buffered."""
-    resident = r * d * itemsize
-    streamed = 2 * (block_t * k * 4 + block_t * k * 4
-                    + block_t * d * itemsize)
-    return resident + streamed
+    """Static per-grid-step VMEM footprint of ``combine_rows`` — the slot
+    buffer streams in [brf, d] tiles (no R-resident block; PR-4 ceiling
+    retired), rows/weights and the fp32 output tile double-buffer."""
+    return 2 * (block_t * k * 4 + block_t * k * 4
+                + block_r * d * itemsize + block_t * d * 4)
 
 
 def _check_vmem(name: str, footprint: int, interpret: bool,
@@ -63,8 +75,8 @@ def _check_vmem(name: str, footprint: int, interpret: bool,
     if budget is not None and footprint > budget:
         raise ValueError(
             f"{name}: static VMEM footprint {footprint:,} B exceeds the "
-            f"per-core budget {int(budget):,} B ({note} is resident per "
-            f"grid step — the re-tiling target tracked by repro.analysis; "
+            f"per-core budget {int(budget):,} B ({note} per "
+            f"grid step — checked against repro.analysis pass 1; "
             f"shrink the block or split the call)")
 
 
@@ -84,23 +96,35 @@ def invert_slots(rows, n_rows: int):
     return jnp.where(src >= 0, src // k, -1), jnp.where(src >= 0, src % k, -1)
 
 
-def _dispatch_kernel(src_ref, scale_ref, x_ref, o_ref):
-    idx = src_ref[...][:, 0]                            # [br]
-    rows = jnp.take(x_ref[...], jnp.maximum(idx, 0), axis=0)
-    s = jnp.where(idx >= 0, scale_ref[...][:, 0], 0.0)  # [br] f32
-    o_ref[...] = (rows.astype(jnp.float32) * s[:, None]).astype(o_ref.dtype)
+def _dispatch_kernel(src_ref, scale_ref, x_ref, o_ref, *, block_src: int):
+    # source tiles stream along grid dim 1; the output tile is revisited,
+    # zero-initialized on the first source tile and accumulated in fp32.
+    # Each output row's source token lives in exactly one tile; the other
+    # tiles add exactly 0.0, so the sum is bitwise the one-pass gather.
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    idx = src_ref[...][:, 0]                            # [br] global token
+    local = idx - j * block_src
+    inside = (idx >= 0) & (local >= 0) & (local < block_src)
+    rows = jnp.take(x_ref[...], jnp.clip(local, 0, block_src - 1), axis=0)
+    s = jnp.where(inside, scale_ref[...][:, 0], 0.0)    # [br] f32
+    o_ref[...] += rows.astype(jnp.float32) * s[:, None]
 
 
 def dispatch_rows(x, src_tok, scale=None, *, block_rows: int = 1024,
-                  interpret: bool | None = None,
+                  block_src: int = 512, interpret: bool | None = None,
                   vmem_budget: int | None = None):
     """x: [T, d]; src_tok: [R] int32 source token per output row (-1 empty);
     scale: optional [R] f32 per-row weight (default 1).  -> [R, d] x.dtype.
 
-    VMEM contract: the whole [T, d] token block is resident (the gather may
-    touch any source row), so T*d*itemsize plus the double-buffered streamed
-    tiles must fit the per-core budget — checked up front via
-    ``dispatch_vmem_bytes`` (raises ValueError instead of a silent TPU OOM).
+    VMEM contract: the token block streams in [block_src, d] tiles (grid
+    dim 1) — nothing scales with the full T extent, so all four paper
+    shapes fit the per-core budget at scale=1.  Checked up front via
+    ``dispatch_vmem_bytes`` (raises ValueError instead of a silent OOM).
     """
     if interpret is None:
         interpret = default_interpret()
@@ -109,65 +133,155 @@ def dispatch_rows(x, src_tok, scale=None, *, block_rows: int = 1024,
     if scale is None:
         scale = jnp.ones((r,), jnp.float32)
     br, r_pad = block_and_pad(r, block_rows)
+    bx, t_pad = block_and_pad(t, block_src)
     _check_vmem("dispatch_rows",
-                dispatch_vmem_bytes(t, d, br, x.dtype.itemsize),
-                interpret, vmem_budget, f"the un-tiled [T={t}, d={d}] block")
+                dispatch_vmem_bytes(br, bx, d, x.dtype.itemsize),
+                interpret, vmem_budget,
+                f"streamed [bx={bx}, d={d}] source + [br={br}, d={d}] "
+                f"output tiles")
     if r_pad != r:
         src_tok = jnp.pad(src_tok, (0, r_pad - r), constant_values=-1)
         scale = jnp.pad(scale, (0, r_pad - r))
+    if t_pad != t:
+        x = jnp.pad(x, ((0, t_pad - t), (0, 0)))
     out = pl.pallas_call(
-        _dispatch_kernel,
-        grid=(r_pad // br,),
+        functools.partial(_dispatch_kernel, block_src=bx),
+        grid=(r_pad // br, t_pad // bx),
         in_specs=[
-            pl.BlockSpec((br, 1), lambda i: (i, 0)),
-            pl.BlockSpec((br, 1), lambda i: (i, 0)),
-            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bx, d), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((r_pad, d), x.dtype),
+        out_specs=pl.BlockSpec((br, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r_pad, d), jnp.float32),
         interpret=interpret,
     )(src_tok[:, None], scale.astype(jnp.float32)[:, None], x)
-    return out[:r]
+    return out[:r].astype(x.dtype)
 
 
-def _combine_kernel(idx_ref, w_ref, buf_ref, o_ref):
+def _combine_kernel(idx_ref, w_ref, buf_ref, o_ref, *, block_rows: int):
+    # slot-buffer tiles stream along grid dim 1; each (token, choice) hits
+    # exactly one tile (others add 0.0) and fp32 addition is commutative,
+    # so the accumulated weighted sum equals the one-pass reduction bitwise.
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
     idx = idx_ref[...]                                  # [bt, k]
-    vals = jnp.take(buf_ref[...], jnp.maximum(idx, 0), axis=0)  # [bt, k, d]
-    w = jnp.where(idx >= 0, w_ref[...], 0.0)            # [bt, k] f32
-    o_ref[...] = jnp.sum(vals.astype(jnp.float32) * w[..., None],
-                         axis=1).astype(o_ref.dtype)
+    local = idx - j * block_rows
+    inside = (idx >= 0) & (local >= 0) & (local < block_rows)
+    vals = jnp.take(buf_ref[...], jnp.clip(local, 0, block_rows - 1),
+                    axis=0)                             # [bt, k, d]
+    w = jnp.where(inside, w_ref[...], 0.0)              # [bt, k] f32
+    o_ref[...] += jnp.sum(vals.astype(jnp.float32) * w[..., None], axis=1)
 
 
 def combine_rows(buf, rows, weights, *, block_t: int = 1024,
-                 interpret: bool | None = None,
+                 block_rows: int = 512, interpret: bool | None = None,
                  vmem_budget: int | None = None):
     """buf: [R, d] slot rows; rows: [T, k] int32 flat slot per (token,
     choice), -1 dropped; weights: [T, k] gate weights.  -> [T, d] buf.dtype.
 
-    VMEM contract: the whole [R, d] slot buffer is resident (each token
-    gathers arbitrary slots), checked up front via ``combine_vmem_bytes``.
+    VMEM contract: the slot buffer streams in [block_rows, d] tiles (grid
+    dim 1) — no R-resident block — checked via ``combine_vmem_bytes``.
     """
     if interpret is None:
         interpret = default_interpret()
     r, d = buf.shape
     t, k = rows.shape
     bt, t_pad = block_and_pad(t, block_t)
+    brf, r_pad = block_and_pad(r, block_rows)
     _check_vmem("combine_rows",
-                combine_vmem_bytes(r, d, bt, k, buf.dtype.itemsize),
-                interpret, vmem_budget, f"the un-tiled [R={r}, d={d}] buffer")
+                combine_vmem_bytes(bt, brf, d, k, buf.dtype.itemsize),
+                interpret, vmem_budget,
+                f"streamed [brf={brf}, d={d}] buffer + [bt={bt}, d={d}] "
+                f"output tiles")
     if t_pad != t:
         rows = jnp.pad(rows, ((0, t_pad - t), (0, 0)), constant_values=-1)
         weights = jnp.pad(weights, ((0, t_pad - t), (0, 0)))
+    if r_pad != r:
+        buf = jnp.pad(buf, ((0, r_pad - r), (0, 0)))
     out = pl.pallas_call(
-        _combine_kernel,
+        functools.partial(_combine_kernel, block_rows=brf),
+        grid=(t_pad // bt, r_pad // brf),
+        in_specs=[
+            pl.BlockSpec((bt, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((brf, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, d), jnp.float32),
+        interpret=interpret,
+    )(rows, weights.astype(jnp.float32), buf)
+    return out[:t].astype(buf.dtype)
+
+
+def _route_kernel(idx_ref, pos_ref, cum_ref, slot_ref, o_ref, *,
+                  slot_cap: int):
+    # bin partition: replica r owns positions [cum[r-1], cum[r]) of its
+    # expert's GShard priority ranks.  Zero-weight (incl. dead/padded)
+    # replicas never advance the cumsum, so they own an empty bin and are
+    # skipped; pos >= total (= cum[-1]) is dropped.  Pure int32 arithmetic —
+    # exactly equal to the XLA reference on both backends.
+    idx_raw = idx_ref[...]                              # [bt, k]
+    idx = jnp.maximum(idx_raw, 0)
+    pos = pos_ref[...]                                  # [bt, k]
+    cum = jnp.take(cum_ref[...], idx, axis=0)           # [bt, k, R]
+    rw = cum.shape[-1]
+    total = cum[..., -1]
+    ge = pos[..., None] >= cum                          # [bt, k, R]
+    which = jnp.minimum(jnp.sum(ge.astype(jnp.int32), axis=-1), rw - 1)
+    prev = jnp.max(jnp.where(ge, cum, 0), axis=-1)      # cum[which-1] or 0
+    slotvals = jnp.take(slot_ref[...], idx, axis=0)     # [bt, k, R]
+    r_iota = jax.lax.broadcasted_iota(jnp.int32, cum.shape, 2)
+    slot = jnp.sum(jnp.where(r_iota == which[..., None], slotvals, 0),
+                   axis=-1)
+    rows = slot * slot_cap + (pos - prev)
+    keep = (idx_raw >= 0) & (pos < total) & (slot >= 0)
+    o_ref[...] = jnp.where(keep, rows, -1)
+
+
+def weighted_route(expert_idx, position, cum_weights, slot_of,
+                   slot_cap: int, *, block_t: int = 1024,
+                   interpret: bool | None = None):
+    """Map each kept (token, choice) onto a weighted replica row.
+
+    expert_idx: [T, k] int32 chosen expert (-1 allowed, treated dropped);
+    position:   [T, k] int32 GShard priority rank within the expert;
+    cum_weights:[E, R] int32 inclusive cumsum of the per-replica integer
+                routing weights (constant past the live columns);
+    slot_of:    [E, R] int32 global slot id per replica (-1 on pads);
+    slot_cap:   rows per slot.  -> [T, k] int32 flat destination row
+    (slot * slot_cap + within-replica offset), -1 for dropped.
+
+    The [E, R] weight/slot tables are VMEM-resident (metadata-sized);
+    token tiles stream.  Positions >= the expert's total integer weight
+    are dropped — with weights from ``integer_route_weights`` that is
+    exactly the capacity rule, with no per-slot recount afterwards.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    t, k = expert_idx.shape
+    bt, t_pad = block_and_pad(t, block_t)
+    if t_pad != t:
+        expert_idx = jnp.pad(expert_idx, ((0, t_pad - t), (0, 0)),
+                             constant_values=-1)
+        position = jnp.pad(position, ((0, t_pad - t), (0, 0)))
+    e, rw = cum_weights.shape
+    out = pl.pallas_call(
+        functools.partial(_route_kernel, slot_cap=int(slot_cap)),
         grid=(t_pad // bt,),
         in_specs=[
             pl.BlockSpec((bt, k), lambda i: (i, 0)),
             pl.BlockSpec((bt, k), lambda i: (i, 0)),
-            pl.BlockSpec((r, d), lambda i: (0, 0)),
+            pl.BlockSpec((e, rw), lambda i: (0, 0)),
+            pl.BlockSpec((e, rw), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((t_pad, d), buf.dtype),
+        out_specs=pl.BlockSpec((bt, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_pad, k), jnp.int32),
         interpret=interpret,
-    )(rows, weights.astype(jnp.float32), buf)
+    )(expert_idx.astype(jnp.int32), position.astype(jnp.int32),
+      cum_weights.astype(jnp.int32), slot_of.astype(jnp.int32))
     return out[:t]

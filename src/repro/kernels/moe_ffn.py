@@ -87,16 +87,28 @@ def grouped_ffn(x, wi, wu, wo, *, ffn_type: str = "swiglu",
 
 
 def _mm_kernel(a_ref, b_ref, o_ref):
-    o_ref[0] = jnp.dot(a_ref[0], b_ref[0], preferred_element_type=jnp.float32)
+    # K is the innermost grid dim: the output block is revisited across K
+    # tiles, zero-initialized on the first visit and accumulated in fp32.
+    # Padded K rows/cols are zeros, so they add exactly 0.0 — bitwise equal
+    # to the single-pass product.
+    @pl.when(pl.program_id(3) == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[0] += jnp.dot(a_ref[0], b_ref[0],
+                        preferred_element_type=jnp.float32)
 
 
 def grouped_matmul(a, b, *, block_m: int = 256, block_n: int = 512,
-                   interpret: bool | None = None):
+                   block_k: int = 512, interpret: bool | None = None):
     """Grouped GEMM: a [E, M, K] @ b [E, K, N] -> [E, M, N] in fp32.
 
     The dgrad/wgrad primitive of the grouped-FFN backward: every gradient
     of ``grouped_ffn`` is one of these per expert row, tiled exactly like
-    the forward (full-K blocks resident in VMEM, M/N padded to the tile).
+    the forward.  All three GEMM dims are blocked — K streams as the
+    innermost grid axis accumulating into the revisited fp32 output block,
+    so paper-width contractions (e.g. wgrad's K == T) no longer pin a
+    full-K operand pair in VMEM.
     """
     if interpret is None:
         interpret = default_interpret()
@@ -104,18 +116,24 @@ def grouped_matmul(a, b, *, block_m: int = 256, block_n: int = 512,
     n = b.shape[-1]
     bm, m_pad = block_and_pad(m, block_m)
     bn, n_pad = block_and_pad(n, block_n, sub=LANE)   # N is the lane dim
+    # K is a's lane dim AND b's sublane dim -> LANE-multiple tiles serve both
+    bk, k_pad = block_and_pad(k, block_k, sub=LANE)
     if m_pad != m:
         a = jnp.pad(a, ((0, 0), (0, m_pad - m), (0, 0)))
+    if k_pad != k:
+        a = jnp.pad(a, ((0, 0), (0, 0), (0, k_pad - k)))
+        b = jnp.pad(b, ((0, 0), (0, k_pad - k), (0, 0)))
     if n_pad != n:
         b = jnp.pad(b, ((0, 0), (0, 0), (0, n_pad - n)))
     out = pl.pallas_call(
         _mm_kernel,
-        grid=(e, m_pad // bm, n_pad // bn),
+        grid=(e, m_pad // bm, n_pad // bn, k_pad // bk),
         in_specs=[
-            pl.BlockSpec((1, bm, k), lambda e_, m_, n_: (e_, m_, 0)),
-            pl.BlockSpec((1, k, bn), lambda e_, m_, n_: (e_, 0, n_)),
+            pl.BlockSpec((1, bm, bk), lambda e_, m_, n_, k_: (e_, m_, k_)),
+            pl.BlockSpec((1, bk, bn), lambda e_, m_, n_, k_: (e_, k_, n_)),
         ],
-        out_specs=pl.BlockSpec((1, bm, bn), lambda e_, m_, n_: (e_, m_, n_)),
+        out_specs=pl.BlockSpec((1, bm, bn),
+                               lambda e_, m_, n_, k_: (e_, m_, n_)),
         out_shape=jax.ShapeDtypeStruct((e, m_pad, n_pad), jnp.float32),
         interpret=interpret,
     )(a, b)

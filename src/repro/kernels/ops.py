@@ -23,12 +23,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.dispatch import combine_rows, dispatch_rows, invert_slots
+from repro.kernels.dispatch import (combine_rows, dispatch_rows,
+                                    invert_slots, weighted_route)
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.moe_ffn import grouped_ffn, grouped_matmul
 from repro.kernels.rwkv6 import rwkv6_wkv
 from repro.kernels.ssd import ssd_scan
-from repro.kernels.topk_gating import topk_gating_fused
+from repro.kernels.topk_gating import topk_gating_fused, topk_positions
 
 
 def on_tpu() -> bool:
@@ -155,6 +156,77 @@ def topk_gating_op(x, router, k: int, use_pallas: bool | None = None):
         return _gating_oracle(x, router, k)
     idx, w, probs = _topk_gating_pallas(x, router, k)
     return idx.astype(jnp.int32), w, probs
+
+
+# ---------------------------------------------------------------------------
+# fused dispatch metadata (priority positions + weighted replica routing)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _positions_pallas(expert_idx, n_experts):
+    # integer output -> f32 carrier across the custom-VJP boundary (same
+    # float0 rationale as _topk_gating_pallas)
+    return topk_positions(expert_idx, n_experts,
+                          interpret=_interpret()).astype(jnp.float32)
+
+
+def _positions_fwd(expert_idx, n_experts):
+    return _positions_pallas(expert_idx, n_experts), (expert_idx,)
+
+
+def _positions_bwd(n_experts, res, dpos):
+    (expert_idx,) = res
+    return (_int_zero_ct(expert_idx),)
+
+
+_positions_pallas.defvjp(_positions_fwd, _positions_bwd)
+
+
+def topk_positions_op(expert_idx, n_experts: int,
+                      use_pallas: bool | None = None):
+    """GShard priority positions: expert_idx [T, k] i32 -> [T, k] i32
+    choice-major rank within each expert (the capacity cumsum that was a
+    [T, k, E] one-hot in core.gating, fused on the kernel path)."""
+    use = on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return ref.ref_topk_positions(expert_idx, n_experts)
+    return _positions_pallas(expert_idx, n_experts).astype(jnp.int32)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _weighted_route_pallas(expert_idx, position, cum_weights, slot_of,
+                           slot_cap):
+    return weighted_route(expert_idx, position, cum_weights, slot_of,
+                          slot_cap, interpret=_interpret()
+                          ).astype(jnp.float32)
+
+
+def _weighted_route_fwd(expert_idx, position, cum_weights, slot_of,
+                        slot_cap):
+    return (_weighted_route_pallas(expert_idx, position, cum_weights,
+                                   slot_of, slot_cap),
+            (expert_idx, position, cum_weights, slot_of))
+
+
+def _weighted_route_bwd(slot_cap, res, drows):
+    return tuple(_int_zero_ct(a) for a in res)
+
+
+_weighted_route_pallas.defvjp(_weighted_route_fwd, _weighted_route_bwd)
+
+
+def weighted_route_op(expert_idx, position, cum_weights, slot_of,
+                      slot_cap: int, use_pallas: bool | None = None):
+    """Weighted replica-bin routing (Lina §5/§6.2 zero-migration split):
+    (expert, priority position) -> flat destination row given the
+    per-(expert, replica) integer weight cumsum and replica->slot table;
+    -1 = dropped.  Integer-exact on both backends."""
+    use = on_tpu() if use_pallas is None else use_pallas
+    if not use:
+        return ref.ref_weighted_route(expert_idx, position, cum_weights,
+                                      slot_of, slot_cap)
+    return _weighted_route_pallas(expert_idx, position, cum_weights,
+                                  slot_of, slot_cap).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------

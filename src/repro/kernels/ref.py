@@ -47,6 +47,47 @@ def ref_combine_rows(buf, rows, weights):
                    axis=1).astype(buf.dtype)
 
 
+def ref_topk_positions(expert_idx, n_experts: int):
+    """GShard priority positions.  expert_idx: [T, k] int32 (-1 = masked)
+    -> [T, k] int32 choice-major rank of each (token, choice) within its
+    expert: all first choices outrank any second choice.  Masked rows get
+    rank 0 and do not advance any counter."""
+    t, k = expert_idx.shape
+    onehot = (expert_idx[..., None]
+              == jnp.arange(n_experts, dtype=jnp.int32)).astype(jnp.int32)
+    flat = onehot.transpose(1, 0, 2).reshape(k * t, n_experts)
+    pos = jnp.cumsum(flat, axis=0) - flat
+    pos = pos.reshape(k, t, n_experts).transpose(1, 0, 2)
+    return jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)
+
+
+def ref_weighted_route(expert_idx, position, cum_weights, slot_of,
+                       slot_cap: int, xp=jnp):
+    """Weighted replica-bin routing (the ``weighted_route`` kernel oracle).
+
+    expert_idx/position: [T, k] int32; cum_weights/slot_of: [E, R] int32
+    (inclusive weight cumsum / global slot per replica, -1 pads);
+    -> [T, k] int32 flat row (slot * slot_cap + offset), -1 dropped.
+
+    Pure integer arithmetic, exactly the kernel's bin partition; pass
+    ``xp=numpy`` for the host-side telemetry mirror.
+    """
+    idx = xp.maximum(expert_idx, 0)
+    cum = xp.take(cum_weights, idx, axis=0)             # [T, k, R]
+    rw = cum.shape[-1]
+    total = cum[..., -1]
+    ge = position[..., None] >= cum
+    which = xp.minimum(xp.sum(ge.astype(xp.int32), axis=-1), rw - 1)
+    prev = xp.max(xp.where(ge, cum, 0), axis=-1)
+    slotvals = xp.take(slot_of, idx, axis=0)            # [T, k, R]
+    r_iota = xp.arange(rw, dtype=xp.int32)
+    slot = xp.sum(xp.where(r_iota[None, None, :] == which[..., None],
+                           slotvals, 0), axis=-1)
+    rows = slot * slot_cap + (position - prev)
+    keep = (expert_idx >= 0) & (position < total) & (slot >= 0)
+    return xp.where(keep, rows, -1).astype(xp.int32)
+
+
 def ref_attention(q, k, v, *, causal: bool = True, window: int = 0):
     """q: [B, Sq, H, hd]; k/v: [B, Skv, KV, hd] -> [B, Sq, H, hd]."""
     b, sq, h, hd = q.shape

@@ -17,7 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.tiling import block_and_pad, default_interpret
+from repro.kernels.tiling import (LANE, SUBLANE, block_and_pad,
+                                  default_interpret, pad_to)
 
 
 def _softmax_topk(logits, idx_ref, w_ref, probs_ref, k: int):
@@ -96,3 +97,63 @@ def topk_gating_fused(logits_or_x, k: int = 2, *, router=None,
         interpret=interpret,
     )(*args)
     return idx[:t], w[:t], probs[:t]
+
+
+def _pos_kernel(idx_ref, pos_ref, cnt_ref, *, e_pad: int):
+    # The per-expert counter lives in the revisited second output block
+    # (CONST index map -> persistent across grid steps); padded token rows
+    # carry expert id -1, so their one-hot is all-zero and they neither
+    # take a rank nor advance the counter.
+    j = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when((j == 0) & (i == 0))
+    def _():
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    idx = idx_ref[...][:, 0]                            # [bt]
+    onehot = (idx[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (idx.shape[0], e_pad), 1)).astype(jnp.int32)
+    base = cnt_ref[0, :]                                # [e_pad]
+    rank = jnp.cumsum(onehot, axis=0) - onehot
+    pos_ref[...] = jnp.sum((rank + base[None, :]) * onehot,
+                           axis=1)[:, None]
+    cnt_ref[0, :] = base + jnp.sum(onehot, axis=0)
+
+
+def topk_positions(expert_idx, n_experts: int, *, block_t: int = 1024,
+                   interpret: bool | None = None):
+    """GShard priority positions, fused: expert_idx [T, k] int32 (-1 for
+    masked rows) -> position [T, k] int32, the choice-major rank of each
+    (token, choice) within its expert — choice 0 of every token outranks
+    choice 1 of any token, exactly the one-hot cumsum in
+    ``core.gating.gating_from_topk``, without ever materializing the
+    [T, k, E] one-hot in HBM.
+
+    Grid (k, T/bt): the choice axis is OUTERMOST so priority order matches
+    the reference; a [1, E] counter block is revisited across all grid
+    steps and carries each expert's running count.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    t, k = expert_idx.shape
+    bt, t_pad = block_and_pad(t, block_t)
+    e_pad = pad_to(max(int(n_experts), 1), LANE)
+    if t_pad != t:
+        expert_idx = jnp.pad(expert_idx, ((0, t_pad - t), (0, 0)),
+                             constant_values=-1)
+    pos, _ = pl.pallas_call(
+        functools.partial(_pos_kernel, e_pad=e_pad),
+        grid=(k, t_pad // bt),
+        in_specs=[pl.BlockSpec((bt, 1), lambda j, i: (i, j))],
+        out_specs=(
+            pl.BlockSpec((bt, 1), lambda j, i: (i, j)),
+            pl.BlockSpec((SUBLANE, e_pad), lambda j, i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((t_pad, k), jnp.int32),
+            jax.ShapeDtypeStruct((SUBLANE, e_pad), jnp.int32),
+        ),
+        interpret=interpret,
+    )(expert_idx.astype(jnp.int32))
+    return pos[:t]

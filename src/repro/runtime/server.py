@@ -48,9 +48,12 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.gating import capacity
 from repro.core.placement import (PlacementPlan, PlanCache, identity_plan,
-                                  needs_finetune, plan_placement)
+                                  needs_finetune, plan_placement,
+                                  route_weights)
 from repro.core.popularity import PathProfile
-from repro.core.serving import PlanArrays, dp_shard_count, serve_moe_layer
+from repro.core.serving import (PlanArrays, dp_shard_count,
+                                replica_token_counts, serve_moe_layer,
+                                slot_capacity)
 from repro.models import lm as lm_mod
 from repro.models.attention import KVCache, attention, decode_attention
 from repro.models.layers import rms_norm
@@ -67,6 +70,8 @@ class ServerConfig:
     use_finetuning: bool = True    # ablation: False = never fine-tune
     schedule_policy: str = "lina"  # lina | uniform (DeepSpeed baseline)
     plan_cache: bool = True        # reuse plans across batches until drift
+    route_mode: str = "weighted"   # weighted (§5 histogram split) |
+    #                                round_robin (positional ablation)
 
 
 @dataclass
@@ -79,6 +84,10 @@ class LayerStats:
     plan_reused: bool              # plan came from the cache (no re-plan)
     device_load: np.ndarray        # token share per device (actual workload)
     n_tokens: int = 0              # valid tokens this layer dispatched
+    replica_load: Optional[np.ndarray] = None
+    #                                [n_slots] realized valid-token count per
+    #                                (device, sub-slot) after replica routing
+    #                                (host mirror of the device split)
 
 
 class ServeResult(NamedTuple):
@@ -219,10 +228,10 @@ class MoEServer:
                 np.full((cfg.moe.n_experts,), 1.0 / cfg.moe.n_experts),
                 np.full((cfg.moe.n_experts,), r, np.int64),
                 self.n_dev, max_pack=self.scfg.max_pack, rep_width=width)
-            se, ro, nr = self._plan_device(plan)
+            se, ro, nr, rw = self._plan_device(plan)
             h2 = jnp.zeros((bucket, cfg.d_model), jnp.dtype(cfg.dtype))
             jax.block_until_ready(self._dispatch(
-                gp.moe, h2, se, ro, nr,
+                gp.moe, h2, se, ro, nr, rw,
                 min_replicas=int(plan.n_replicas.min()), cap=cap))
         return len(combos)
 
@@ -251,17 +260,19 @@ class MoEServer:
         _, idx = jax.lax.top_k(probs, self.scfg.top_k)
         return probs, idx.astype(jnp.int32)
 
-    def _dispatch_fn(self, moe_p, h2, se, ro, nr, *, min_replicas: int,
+    def _dispatch_fn(self, moe_p, h2, se, ro, nr, rw, *, min_replicas: int,
                      cap: int):
-        """The distributed MoE layer under the final plan: replica
-        round-robin + packed experts via ``serve_moe_layer`` (shard_map;
-        collapses to single-device collectives on the default mesh)."""
-        plan = PlanArrays(se, ro, nr)
+        """The distributed MoE layer under the final plan: weighted (or
+        round-robin) replica split + packed experts via ``serve_moe_layer``
+        (shard_map; collapses to single-device collectives on the default
+        mesh)."""
+        plan = PlanArrays(se, ro, nr, rw)
         y, _, _ = serve_moe_layer(self.mesh, h2, moe_p, self.cfg.moe, plan,
                                   ffn_type=self.cfg.ffn_type,
                                   top_k=self.scfg.top_k,
                                   min_replicas=min_replicas,
-                                  cap_override=cap)
+                                  cap_override=cap,
+                                  route_mode=self.scfg.route_mode)
         return y
 
     def _valid_capacity(self, n_valid: int, n_total: int) -> int:
@@ -363,32 +374,53 @@ class MoEServer:
 
         # dispatch under the final plan (distributed path); capacity sized
         # from valid tokens, not the padded batch
-        se, ro, nr = self._plan_device(plan)
-        y = self._dispatch(
-            gp.moe, h2, se, ro, nr,
-            min_replicas=int(plan.n_replicas.min()),
-            cap=self._valid_capacity(int(valid.sum()), h2.shape[0]))
+        cap = self._valid_capacity(int(valid.sum()), h2.shape[0])
+        min_rep = int(plan.n_replicas.min())
+        se, ro, nr, rw = self._plan_device(plan)
+        y = self._dispatch(gp.moe, h2, se, ro, nr, rw,
+                           min_replicas=min_rep, cap=cap)
+
+        # host mirror of the replica split: realized valid-token count per
+        # (device, sub-slot) — what the telemetry bus/controller observes
+        # as post-routing imbalance
+        rep_load = replica_token_counts(
+            np.asarray(idx), self._host_plan(plan), cap,
+            slot_capacity(cap, min_rep), valid=valid,
+            dp_shards=dp_shard_count(self.mesh, h2.shape[0]),
+            route_mode=scfg.route_mode)
 
         # loads are always evaluated against the ACTUAL popularity — the
         # plan decides placement, the workload decides load
         stat = LayerStats(li, np.asarray(est), np.asarray(actual), finetuned,
                           accurate, reused,
                           plan.device_load(actual.astype(np.float32)),
-                          n_tokens=int(valid.sum()))
+                          n_tokens=int(valid.sum()),
+                          replica_load=rep_load)
         return y, top1, stat
 
     def _plan_device(self, plan: PlacementPlan):
         """Device-resident plan arrays, cached per plan object — the
         PlanCache keeps plan identity stable across batches/steps, so the
-        host->device upload happens once per (layer, popularity regime)."""
+        host->device upload (and the route-weight IPF) happens once per
+        (layer, popularity regime)."""
         ent = self._plan_arrays.get(id(plan))
         if ent is None or ent[0] is not plan:
             if len(self._plan_arrays) > 256:
                 self._plan_arrays.clear()
+            host_rw = route_weights(plan)
             ent = (plan, jnp.asarray(plan.slot_expert),
-                   jnp.asarray(plan.replica_of), jnp.asarray(plan.n_replicas))
+                   jnp.asarray(plan.replica_of), jnp.asarray(plan.n_replicas),
+                   jnp.asarray(host_rw),
+                   PlanArrays(plan.slot_expert, plan.replica_of,
+                              plan.n_replicas, host_rw))
             self._plan_arrays[id(plan)] = ent
-        return ent[1], ent[2], ent[3]
+        return ent[1], ent[2], ent[3], ent[4]
+
+    def _host_plan(self, plan: PlacementPlan) -> PlanArrays:
+        """Host-side (numpy-leaf) PlanArrays for ``plan``, sharing the
+        cached route-weight table with ``_plan_device``."""
+        self._plan_device(plan)
+        return self._plan_arrays[id(plan)][5]
 
     def _group_params(self, g):
         gp = self._gp_cache.get(g)

@@ -52,6 +52,8 @@ class LayerTelemetry:
     load_max: float = 0.0                     # EWMA max device token share
     load_mean: float = 0.0                    # EWMA mean device token share
     tokens: float = 0.0                       # EWMA tokens per observation
+    rep_max: float = 0.0                      # EWMA max per-replica tokens
+    rep_mean: float = 0.0                     # EWMA mean per-replica tokens
     steps: int = 0
     finetunes: int = 0
     reuses: int = 0
@@ -61,6 +63,14 @@ class LayerTelemetry:
     def imbalance(self) -> float:
         """max/mean device token share — 1.0 is perfectly balanced."""
         return self.load_max / self.load_mean if self.load_mean > 0 else 0.0
+
+    @property
+    def replica_imbalance(self) -> float:
+        """max/mean realized tokens per placement slot — how evenly the
+        weighted router spreads an expert's load over its replicas (the
+        quantity Lina's weighted scheduling targets; 1.0 = perfectly even,
+        0.0 = not yet observed)."""
+        return self.rep_max / self.rep_mean if self.rep_mean > 0 else 0.0
 
     def a2a_bytes(self, bytes_per_token: float) -> float:
         """Modeled bytes the most-loaded device's link carries per step
@@ -122,6 +132,12 @@ class TelemetryBus:
             load = np.asarray(s.device_load, np.float64)
             lt.load_max += a * (float(load.max()) - lt.load_max)
             lt.load_mean += a * (float(load.mean()) - lt.load_mean)
+            rep = getattr(s, "replica_load", None)
+            if rep is not None:
+                rep = np.asarray(rep, np.float64)
+                if rep.size and rep.sum() > 0:
+                    lt.rep_max += a * (float(rep.max()) - lt.rep_max)
+                    lt.rep_mean += a * (float(rep.mean()) - lt.rep_mean)
             lt.tokens += a * (float(toks) - lt.tokens)
             lt.steps += 1
             lt.finetunes += int(s.finetuned)
@@ -187,6 +203,7 @@ class TelemetryBus:
                 li: {
                     "drift_rate": lt.drift_rate,
                     "imbalance": lt.imbalance,
+                    "replica_imbalance": lt.replica_imbalance,
                     "tokens_ewma": lt.tokens,
                     "a2a_bytes_max": lt.a2a_bytes(self.cfg.bytes_per_token),
                     "observations": lt.steps,

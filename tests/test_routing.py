@@ -1,0 +1,329 @@
+"""Weighted zero-migration replica routing (Lina §5/§6.2).
+
+Property tests for the serving-side replica split introduced with the
+fused routing kernels: integer weight apportionment (token conservation,
+±1 targets, slot_cap clamp), fused-vs-XLA exactness of the routing kernels
+(ties and all-dropped included), the numpy telemetry mirror agreeing with
+the jnp path, the route_to_slots pad-column clamp on stacked plans with
+heterogeneous per-layer replica counts, and end-to-end backend parity of
+``serve_moe_layer`` in weighted mode.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.configs.base import MoEConfig
+from repro.core import init_moe_params
+from repro.core.placement import identity_plan, plan_placement, route_weights
+from repro.core.serving import (PlanArrays, integer_route_weights,
+                                replica_token_counts, route_to_slots,
+                                serve_moe_layer, slot_capacity,
+                                stack_plan_arrays, uniform_route_weight)
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref
+from repro.kernels.dispatch import weighted_route
+from repro.kernels.topk_gating import topk_positions
+
+
+def _rand_plan(e, n_dev, seed, max_pack=2):
+    pop = np.random.RandomState(seed).dirichlet(np.ones(e) * 0.4)
+    return plan_placement(pop, n_dev, max_pack=max_pack)
+
+
+# ------------------------------------------------- integer weight split --
+
+@settings(max_examples=30, deadline=None)
+@given(e=st.integers(2, 12), seed=st.integers(0, 10_000),
+       slot_cap=st.sampled_from([8, 16, 48]))
+def test_integer_weights_conserve_tokens(e, seed, slot_cap):
+    """Row sums cover the realized counts whenever the live replicas have
+    the headroom; every entry is in [0, slot_cap]; dead columns stay 0."""
+    rng = np.random.RandomState(seed)
+    plan = _rand_plan(e, max(2, e // 2), seed)
+    rw = route_weights(plan)
+    counts = rng.randint(0, 3 * slot_cap, size=e).astype(np.int32)
+    w = integer_route_weights(counts, rw, plan.n_replicas, slot_cap, xp=np)
+    # liveness as the function defines it: by n_replicas (clamped to >= 1 —
+    # a fully shed expert still gets a fallback column; weighted_route
+    # drops its tokens on the -1 slot id, so nothing mis-routes)
+    live = (np.arange(rw.shape[1])[None, :]
+            < np.clip(plan.n_replicas, 1, rw.shape[1])[:, None])
+    assert w.min() >= 0 and w.max() <= slot_cap
+    assert (w[~live] == 0).all()
+    room = slot_cap * live.sum(1)
+    covered = np.minimum(counts, room)
+    assert (w.sum(1) >= covered).all(), (w.sum(1), covered)
+
+
+@settings(max_examples=30, deadline=None)
+@given(e=st.integers(2, 10), seed=st.integers(0, 10_000))
+def test_integer_weights_near_fractional_targets(e, seed):
+    """Unclamped apportionment stays within +-1 of counts * frac
+    (largest-remainder property)."""
+    rng = np.random.RandomState(seed)
+    plan = _rand_plan(e, max(2, e // 2), seed)
+    rw = route_weights(plan)
+    slot_cap = 1 << 20                     # never clamps
+    counts = rng.randint(0, 500, size=e).astype(np.int32)
+    w = integer_route_weights(counts, rw, plan.n_replicas, slot_cap, xp=np)
+    live = (np.arange(rw.shape[1])[None, :]
+            < np.clip(plan.n_replicas, 1, rw.shape[1])[:, None])
+    frac = np.where(live, rw, 0.0)
+    tot = frac.sum(1, keepdims=True)
+    n_live = np.maximum(live.sum(1, keepdims=True), 1)
+    uniform = np.where(live, 1.0 / n_live, 0.0)
+    frac = np.where(tot > 1e-9, frac / np.maximum(tot, 1e-9), uniform)
+    quota = counts[:, None] * frac
+    assert (np.abs(w - quota)[live] <= 1.0 + 1e-5).all()
+    assert (w.sum(1) == counts).all()      # exact with infinite headroom
+
+
+@settings(max_examples=20, deadline=None)
+@given(e=st.integers(2, 10), seed=st.integers(0, 10_000))
+def test_integer_weights_np_matches_jnp(e, seed):
+    rng = np.random.RandomState(seed)
+    plan = _rand_plan(e, max(2, e // 2), seed)
+    rw = route_weights(plan)
+    counts = rng.randint(0, 100, size=e).astype(np.int32)
+    w_np = integer_route_weights(counts, rw, plan.n_replicas, 16, xp=np)
+    w_j = integer_route_weights(jnp.asarray(counts), jnp.asarray(rw),
+                                jnp.asarray(plan.n_replicas), 16)
+    assert (np.asarray(w_j) == w_np).all()
+
+
+def test_integer_weights_zero_weight_rows_fall_back_uniform():
+    """An all-zero route_weight row (degenerate table) splits uniformly
+    instead of dropping every token."""
+    nr = np.array([3, 2], np.int32)
+    rw = np.array([[0.0, 0.0, 0.0], [0.5, 0.5, 0.0]], np.float32)
+    counts = np.array([9, 4], np.int32)
+    w = integer_route_weights(counts, rw, nr, 8, xp=np)
+    assert (w[0] == np.array([3, 3, 3])).all()
+    assert w[1].sum() == 4 and w[1, 2] == 0
+
+
+# ------------------------------------------------- fused routing kernels --
+
+def _route_case(seed, t=192, k=2, e=6, r_w=3, slot_cap=16):
+    rng = np.random.RandomState(seed)
+    idx = rng.randint(-1, e, size=(t, k)).astype(np.int32)
+    pos = np.asarray(ref.ref_topk_positions(jnp.asarray(np.maximum(idx, 0)),
+                                            e))
+    w_int = rng.randint(0, slot_cap + 1, size=(e, r_w)).astype(np.int32)
+    cum = np.cumsum(w_int, axis=1).astype(np.int32)
+    slot_of = rng.permutation(e * r_w).reshape(e, r_w).astype(np.int32)
+    slot_of[rng.random(size=(e, r_w)) < 0.2] = -1
+    return idx, pos, cum, slot_of, slot_cap
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_weighted_route_kernel_matches_ref(seed):
+    idx, pos, cum, slot_of, slot_cap = _route_case(seed)
+    want = ref.ref_weighted_route(jnp.asarray(idx), jnp.asarray(pos),
+                                  jnp.asarray(cum), jnp.asarray(slot_of),
+                                  slot_cap)
+    got = weighted_route(jnp.asarray(idx), jnp.asarray(pos),
+                         jnp.asarray(cum), jnp.asarray(slot_of), slot_cap,
+                         block_t=64, interpret=True)
+    assert (np.asarray(got) == np.asarray(want)).all()
+    # and the numpy mirror agrees bit for bit
+    got_np = ref.ref_weighted_route(idx, pos, cum, slot_of, slot_cap, xp=np)
+    assert (got_np == np.asarray(want)).all()
+
+
+def test_weighted_route_ties_and_all_dropped():
+    # ties: every replica bin boundary equal (zero-width bins) -> all the
+    # tokens land in the single non-empty bin or drop past the total
+    e, r_w, slot_cap = 3, 3, 4
+    cum = np.tile(np.array([[4, 4, 4]], np.int32), (e, 1))  # only bin 0 live
+    slot_of = np.arange(e * r_w, dtype=np.int32).reshape(e, r_w)
+    idx = np.array([[0], [0], [0], [0], [0], [1]], np.int32)
+    pos = np.array([[0], [1], [2], [3], [4], [0]], np.int32)
+    out = np.asarray(weighted_route(jnp.asarray(idx), jnp.asarray(pos),
+                                    jnp.asarray(cum), jnp.asarray(slot_of),
+                                    slot_cap, interpret=True))
+    want = np.asarray(ref.ref_weighted_route(
+        jnp.asarray(idx), jnp.asarray(pos), jnp.asarray(cum),
+        jnp.asarray(slot_of), slot_cap))
+    assert (out == want).all()
+    assert (out[:4, 0] == slot_of[0, 0] * slot_cap + pos[:4, 0]).all()
+    assert out[4, 0] == -1                       # pos >= total weight
+    # all dropped: -1 experts and zero weights
+    cum0 = np.zeros((e, r_w), np.int32)
+    idx2 = np.full((5, 2), -1, np.int32)
+    out2 = np.asarray(weighted_route(jnp.asarray(idx2),
+                                     jnp.zeros((5, 2), jnp.int32),
+                                     jnp.asarray(cum0),
+                                     jnp.asarray(slot_of), slot_cap,
+                                     interpret=True))
+    assert (out2 == -1).all()
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_topk_positions_kernel_matches_ref(seed):
+    rng = np.random.RandomState(seed)
+    t, k, e = 200, 2, 7
+    idx = rng.randint(0, e, size=(t, k)).astype(np.int32)
+    want = np.asarray(ref.ref_topk_positions(jnp.asarray(idx), e))
+    got = np.asarray(topk_positions(jnp.asarray(idx), e, block_t=64,
+                                    interpret=True))
+    assert (got == want).all()
+    # choice-major priority: all 1st choices outrank 2nd choices
+    np_mirror = np.asarray(
+        ref.ref_topk_positions(jnp.asarray(idx), e))
+    assert (np_mirror == want).all()
+
+
+def test_routing_ops_xla_pallas_parity():
+    idx, pos, cum, slot_of, slot_cap = _route_case(11)
+    a = kernel_ops.weighted_route_op(jnp.asarray(idx), jnp.asarray(pos),
+                                     jnp.asarray(cum), jnp.asarray(slot_of),
+                                     slot_cap, use_pallas=False)
+    b = kernel_ops.weighted_route_op(jnp.asarray(idx), jnp.asarray(pos),
+                                     jnp.asarray(cum), jnp.asarray(slot_of),
+                                     slot_cap, use_pallas=True)
+    assert (np.asarray(a) == np.asarray(b)).all()
+    e = 7
+    ridx = jnp.asarray(np.random.RandomState(3).randint(
+        0, e, size=(96, 2)).astype(np.int32))
+    pa = kernel_ops.topk_positions_op(ridx, e, use_pallas=False)
+    pb = kernel_ops.topk_positions_op(ridx, e, use_pallas=True)
+    assert (np.asarray(pa) == np.asarray(pb)).all()
+
+
+# ------------------------------------------- stacked / clamped plans ------
+
+def test_route_to_slots_clamps_stacked_pad_columns():
+    """Regression (PR-7 satellite): a stacked PlanArrays right-pads narrow
+    replica tables with -1; a layer whose n_replicas exceeds its own live
+    width must never index a pad column into a bogus slot."""
+    e = 4
+    wide = _rand_plan(e, 4, seed=0, max_pack=2)      # replica width 4
+    narrow = identity_plan(e, e, max_pack=2)         # width 1
+    st_plan = stack_plan_arrays([wide, narrow])
+    assert st_plan.replica_of.shape == st_plan.route_weight.shape
+    # narrow layer, padded to the wide width: positions sweep far past it
+    layer = jax.tree.map(lambda a: a[1], st_plan)
+    idx = jnp.tile(jnp.arange(e, dtype=jnp.int32)[:, None], (8, 2))
+    pos = jnp.tile(jnp.arange(8, dtype=jnp.int32).repeat(e)[:, None], (1, 2))
+    slots = np.asarray(route_to_slots(idx, pos, layer))
+    n_slots = int(np.asarray(layer.slot_expert).size)
+    assert ((slots >= 0) & (slots < n_slots)).all(), slots
+    # inconsistent plan (n_replicas past the live table) -> -1, not a pad id
+    bad = PlanArrays(layer.slot_expert,
+                     jnp.where(jnp.arange(layer.replica_of.shape[1]) < 1,
+                               layer.replica_of, -1),
+                     jnp.full((e,), 3, jnp.int32), layer.route_weight)
+    s2 = np.asarray(route_to_slots(idx, pos, bad))
+    assert set(np.unique(s2)) <= set(range(-1, n_slots))
+
+
+def test_stacked_route_weights_pad_zero_and_rows_normalize():
+    e = 4
+    plans = [_rand_plan(e, 4, seed=s, max_pack=2) for s in range(2)] \
+        + [identity_plan(e, e, max_pack=2)]
+    st_plan = stack_plan_arrays(plans)
+    rw = np.asarray(st_plan.route_weight)
+    ro = np.asarray(st_plan.replica_of)
+    assert (rw[ro < 0] == 0).all()
+    np.testing.assert_allclose(rw.sum(-1), 1.0, atol=1e-5)
+
+
+def test_uniform_route_weight_matches_live_columns():
+    ro = jnp.asarray([[0, 1, -1], [2, -1, -1]], jnp.int32)
+    nr = jnp.asarray([2, 1], jnp.int32)
+    w = np.asarray(uniform_route_weight(ro, nr))
+    np.testing.assert_allclose(w, [[0.5, 0.5, 0.0], [1.0, 0.0, 0.0]])
+
+
+# --------------------------------------------------- telemetry mirror -----
+
+@pytest.mark.parametrize("mode", ["weighted", "round_robin"])
+def test_replica_token_counts_bounded_by_capacity(mode):
+    e, t, k = 6, 256, 2
+    plan = _rand_plan(e, 4, seed=5)
+    pa = PlanArrays.from_plan(plan)
+    idx = np.random.RandomState(7).randint(0, e, size=(t, k)).astype(np.int32)
+    cap = 48
+    sc = slot_capacity(cap, int(plan.n_replicas.min()))
+    loads = replica_token_counts(idx, pa, cap, sc, route_mode=mode)
+    assert loads.shape == (int(np.asarray(pa.slot_expert).size),)
+    assert loads.max() <= sc
+    kept_floor = min(t * k, e * cap)
+    assert 0 < loads.sum() <= kept_floor
+    # marking half the tokens invalid only removes their counts
+    valid = np.arange(t) % 2 == 0
+    lv = replica_token_counts(idx, pa, cap, sc, valid=valid, route_mode=mode)
+    assert (lv <= loads).all() and lv.sum() < loads.sum()
+
+
+def test_weighted_mirror_tracks_route_weight_skew():
+    """A heavily skewed route_weight table shows up in the mirror: the
+    favored replica of a 2-replica expert carries more tokens."""
+    e = 2
+    plan = plan_placement(np.array([0.5, 0.5]), 2, max_pack=1)
+    assert plan.n_replicas.max() >= 1
+    ro = np.asarray(plan.replica_of)
+    two = int(np.argmax(plan.n_replicas)) if plan.n_replicas.max() > 1 \
+        else None
+    pa = PlanArrays(jnp.asarray(plan.slot_expert), jnp.asarray(ro),
+                    jnp.asarray(plan.n_replicas),
+                    jnp.asarray(np.where(ro >= 0, 1.0, 0.0)
+                                / np.maximum(plan.n_replicas, 1)[:, None]))
+    idx = np.zeros((64, 1), np.int32)     # everything to expert 0
+    sc = slot_capacity(64, 1)
+    base = replica_token_counts(idx, pa, 64, sc, route_mode="weighted")
+    if two == 0:
+        skew = np.asarray(pa.route_weight).copy()
+        skew[0] = np.where(ro[0] >= 0, 0.0, 0.0)
+        skew[0, 0] = 1.0
+        pa2 = pa._replace(route_weight=jnp.asarray(skew))
+        l2 = replica_token_counts(idx, pa2, 64, sc, route_mode="weighted")
+        assert l2[ro[0, 0]] >= base[ro[0, 0]]
+    assert base.sum() == 64
+
+
+# ------------------------------------------------- end-to-end parity ------
+
+def _cfg(backend):
+    return MoEConfig(n_experts=4, top_k=2, d_ff=32, capacity_factor=1.25,
+                     compute_backend=backend)
+
+
+@pytest.mark.parametrize("mode", ["weighted", "round_robin"])
+def test_serve_backend_parity_per_mode(mode):
+    params = init_moe_params(jax.random.PRNGKey(0), 16, 32, 4)
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, 16))
+    for seed in range(2):
+        pop = np.random.RandomState(seed).dirichlet(np.ones(4) * 0.3)
+        plan = plan_placement(pop, 2, max_pack=2)
+        pa = PlanArrays.from_plan(plan)
+        mr = int(plan.n_replicas.min())
+        y1, e1, _ = jax.jit(lambda x, p, pl: serve_moe_layer(
+            None, x, p, _cfg("xla"), pl, top_k=2, min_replicas=mr,
+            route_mode=mode))(x, params, pa)
+        y2, e2, _ = jax.jit(lambda x, p, pl: serve_moe_layer(
+            None, x, p, _cfg("pallas"), pl, top_k=2, min_replicas=mr,
+            route_mode=mode))(x, params, pa)
+        np.testing.assert_allclose(y1, y2, atol=1e-5)
+        assert (np.asarray(e1) == np.asarray(e2)).all()
+
+
+def test_serve_weighted_matches_round_robin_at_ample_capacity():
+    """With capacity ample enough that nothing drops, both modes combine
+    exactly the same expert outputs — the split only changes which replica
+    computes a token, never the math (zero-migration invariant)."""
+    params = init_moe_params(jax.random.PRNGKey(1), 16, 32, 4)
+    x = jax.random.normal(jax.random.PRNGKey(3), (32, 16)) * 0.5
+    pop = np.random.RandomState(0).dirichlet(np.ones(4))
+    plan = plan_placement(pop, 2, max_pack=2)
+    pa = PlanArrays.from_plan(plan)
+    mr = int(plan.n_replicas.min())
+    kw = dict(top_k=2, min_replicas=mr, cap_override=64)
+    yw, _, _ = serve_moe_layer(None, x, params, _cfg("xla"), pa,
+                               route_mode="weighted", **kw)
+    yr, _, _ = serve_moe_layer(None, x, params, _cfg("xla"), pa,
+                               route_mode="round_robin", **kw)
+    np.testing.assert_allclose(np.asarray(yw), np.asarray(yr), atol=1e-6)
