@@ -251,3 +251,26 @@ def fig19_estimation_accuracy(batches=6, seq=64):
     overall = np.mean([a for v in per_layer.values() for a in v])
     rows.append(("fig19/txl-16e-overall", 0.0, f"accuracy={overall:.2f}"))
     return rows
+
+
+def overlap_efficiency_infer(device_count=4, steps=5, batch=4, seq=32,
+                             variants=None, chunk_counts=(1, 2, 4)):
+    """Serve-side overlap efficiency: the forward-only analogue of the
+    training overlap microbench (train_side._measure_overlap_inprocess) on
+    the forced multi-device CPU mesh — fraction of the inference a2a hidden
+    per chunk count per variant (pipelined / pipelined+grouped / shortcut),
+    requested *and* chosen chunk counts surfaced as columns."""
+    from benchmarks.train_side import OVERLAP_VARIANTS, overlap_rows_subprocess
+    rows = []
+    for o in overlap_rows_subprocess(
+            device_count=device_count, steps=steps, batch=batch, seq=seq,
+            variants=variants or OVERLAP_VARIANTS,
+            chunk_counts=chunk_counts, mode="infer"):
+        rows.append((f"overlap-infer/{o['variant']}"
+                     f"-c{o['chunks_requested']}", o["us_per_call"],
+                     f"chunks_requested={o['chunks_requested']},"
+                     f"chunks_chosen={o['chunks_chosen']},"
+                     f"serial_us={o['serial_us']:.1f},"
+                     f"a2a_us={o['a2a_us']:.1f},"
+                     f"a2a_hidden_frac={o['a2a_hidden_frac']:.3f}"))
+    return rows

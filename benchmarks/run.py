@@ -23,7 +23,12 @@ SMOKE_KWARGS = {
                       schedules=("baseline", "fixed",
                                  "priority+partition+pipeline"),
                       partition_sweep=(128e3, 256e3),
+                      overlap_variants=("pipelined", "pipelined+grouped",
+                                        "shortcut"),
+                      overlap_chunks=(2,),
                       json_path="BENCH_schedules.smoke.json"),
+    "overlap-infer": dict(device_count=2, steps=2, batch=2, seq=16,
+                          chunk_counts=(2,)),
     "fig16": dict(batches=2, seq=32),
     "table5": dict(batches=2, seq=32),
     "fig19": dict(batches=2, seq=32),
@@ -51,6 +56,7 @@ def all_benchmarks():
         ("fig15", train_side.fig15_partition_size),
         ("table3", train_side.table3_packing),
         ("schedules", train_side.measured_schedule_ablation),
+        ("overlap-infer", infer_side.overlap_efficiency_infer),
         ("fig16", infer_side.fig16_inference_time),
         ("table5", infer_side.table5_path_length),
         ("fig19", infer_side.fig19_estimation_accuracy),

@@ -225,6 +225,152 @@ def _measure_schedules_inprocess(schedules, steps, batch, seq, microbatches,
     return out, sweep_rows, partition_bytes
 
 
+# ---------------------------------------------------------------------------
+# measured overlap efficiency (Fig. 8b pipeline + ScMoE shortcut)
+# ---------------------------------------------------------------------------
+
+OVERLAP_VARIANTS = ("pipelined", "pipelined+grouped", "shortcut")
+OVERLAP_CHUNKS = (1, 2, 4, 8)
+
+
+def _measure_overlap_inprocess(variants, chunk_counts, steps, batch, seq,
+                               mode="train"):
+    """Worker body: time the expert-parallel MoE layer per overlap variant
+    and requested chunk count on THIS process's device mesh, next to its
+    own serial (pipeline-off) baseline and an a2a-only reference, and
+    report the measured fraction of a2a time the pipeline hides:
+    ``(serial - pipelined) / a2a``, clipped to [0, 1].
+
+    Variants: "pipelined" (xla compute), "pipelined+grouped" (the
+    re-entrant grouped_ffn Pallas kernel per landed chunk), "shortcut"
+    (ScMoE dense branch under the a2a shadow).  ``mode="train"`` times
+    forward+backward; ``"infer"`` forward only.  Returns rows of
+    (mode, variant, requested, chosen, pipe_us, serial_us, a2a_us,
+    hidden_frac) — requested vs *chosen* chunk count are both surfaced
+    (resolve_chunk_count; no silent caps)."""
+    import dataclasses
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import microop
+    from repro.core import moe as moe_mod
+    from repro.core.gating import capacity
+
+    n = jax.device_count()
+    ep = 2 if n % 2 == 0 and n >= 4 else 1
+    dp = max(n // ep, 1)
+    mesh = jax.make_mesh((dp, ep), ("data", "model"))
+    cfg = GPT2_MOE.smoke()
+    d, e, k = cfg.d_model, cfg.moe.n_experts, cfg.moe.top_k
+    f = cfg.moe.d_ff or cfg.d_ff
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 5)
+    params = moe_mod.init_moe_params(ks[0], d, f, e, cfg.ffn_type)
+    sc_params = ((jax.random.normal(ks[1], (d, f)) * d ** -0.5),
+                 (jax.random.normal(ks[2], (d, f)) * d ** -0.5),
+                 (jax.random.normal(ks[3], (f, d)) * f ** -0.5))
+    x = jax.random.normal(ks[4], (batch, seq, d))
+
+    b_loc = batch // dp if batch % dp == 0 else batch
+    s_loc = seq // ep if seq % ep == 0 else seq
+    cap = capacity(b_loc * s_loc, e, k, cfg.moe.capacity_factor)
+
+    def timed(fn, *args):
+        out = fn(*args)                            # compile + warm caches
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / steps * 1e6
+
+    def layer_time(moe_cfg, sc):
+        def fwd(p, xx):
+            out = moe_mod.moe_layer(mesh, xx, p, moe_cfg,
+                                    ffn_type=cfg.ffn_type, lina=True,
+                                    shortcut_params=sc)
+            return (out.y.astype(jnp.float32) ** 2).sum()
+        fn = jax.grad(fwd) if mode == "train" else fwd
+        return timed(jax.jit(fn), params, x)
+
+    # a2a-only reference: the layer's chunked dispatch + combine exchanges
+    # with an identity expert — what the pipeline is trying to hide
+    buf = jax.random.normal(key, (e, cap, d))
+
+    def a2a_time(nc):
+        def body(b):
+            outs = microop.chunked_all_to_all(b, "model", nc)
+            back = [microop.all_to_all_ec_inverse(o, "model", e)
+                    for o in outs]
+            return back[0] if len(back) == 1 else jnp.concatenate(back,
+                                                                  axis=1)
+        fn = shard_map(body, mesh=mesh, in_specs=(P(None, None, None),),
+                       out_specs=P(None, None, None), check_rep=False)
+        return timed(jax.jit(fn), buf)
+
+    a2a_us = {nc: a2a_time(nc) for nc in chunk_counts}
+    rows = []
+    for variant in variants:
+        backend = "pallas" if variant == "pipelined+grouped" else "xla"
+        sc = sc_params if variant == "shortcut" else None
+        base = dataclasses.replace(cfg.moe, compute_backend=backend)
+        serial_us = layer_time(
+            dataclasses.replace(base, pipeline_ffn=False), sc)
+        for nc in chunk_counts:
+            chosen = microop.resolve_chunk_count(cap, nc)
+            pipe_us = layer_time(
+                dataclasses.replace(base, n_microops=nc, pipeline_ffn=True),
+                sc)
+            hidden = max(0.0, min(1.0, (serial_us - pipe_us)
+                                  / max(a2a_us[nc], 1e-9)))
+            rows.append((mode, variant, nc, chosen, pipe_us, serial_us,
+                         a2a_us[nc], hidden))
+    return rows
+
+
+def overlap_rows_subprocess(device_count: int = 4, steps: int = 5,
+                            batch: int = 4, seq: int = 32,
+                            variants=OVERLAP_VARIANTS,
+                            chunk_counts=OVERLAP_CHUNKS, mode="train",
+                            timeout=1800):
+    """Spawn the forced-device worker for the overlap microbench only and
+    return the parsed rows (shared by the infer-side benchmark)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count"
+                        f"={device_count}").strip()
+    env["PYTHONPATH"] = os.pathsep.join([os.path.join(repo, "src"), repo])
+    cmd = [sys.executable, "-m", "benchmarks.train_side",
+           "--steps", str(steps), "--batch", str(batch), "--seq", str(seq),
+           "--overlap-variants", ",".join(variants),
+           "--overlap-chunks", ",".join(str(c) for c in chunk_counts),
+           "--overlap-mode", mode]
+    p = subprocess.run(cmd, env=env, cwd=repo, capture_output=True,
+                       text=True, timeout=timeout)
+    if p.returncode != 0:
+        raise RuntimeError(f"overlap worker failed:\n{p.stderr[-3000:]}")
+    return _parse_overlap_lines(p.stdout)
+
+
+def _parse_overlap_lines(stdout: str):
+    rows = []
+    for line in stdout.splitlines():
+        if not line.startswith("OVERLAP "):
+            continue
+        (_, mode, variant, req, chosen, pipe_us, serial_us, a2a_us,
+         hidden) = line.split()
+        rows.append({"mode": mode, "variant": variant,
+                     "chunks_requested": int(req),
+                     "chunks_chosen": int(chosen),
+                     "us_per_call": float(pipe_us),
+                     "serial_us": float(serial_us),
+                     "a2a_us": float(a2a_us),
+                     "a2a_hidden_frac": float(hidden)})
+    return rows
+
+
 def measured_schedule_ablation(device_count: int = 4, steps: int = 5,
                                batch: int = 4, seq: int = 32,
                                microbatches: int = 2,
@@ -232,6 +378,8 @@ def measured_schedule_ablation(device_count: int = 4, steps: int = 5,
                                partition_bytes: float = None,
                                partition_sweep=PARTITION_SWEEP,
                                grad_compression=None,
+                               overlap_variants=OVERLAP_VARIANTS,
+                               overlap_chunks=OVERLAP_CHUNKS,
                                json_path: str = "BENCH_schedules.json"):
     """Measured wall time of each gradient-reduction schedule through the
     real jitted train step on a ``device_count``-device CPU mesh, with the
@@ -241,7 +389,13 @@ def measured_schedule_ablation(device_count: int = 4, steps: int = 5,
     the worker times ``priority+partition`` over ``partition_sweep`` (the
     measured, smoke-scale analogue of Fig. 15) and the ablation runs at the
     measured minimum; the chosen value is recorded in ``json_path`` and in
-    every row.  Pass an explicit float to pin it."""
+    every row.  Pass an explicit float to pin it.
+
+    The same worker also runs the overlap-efficiency microbench
+    (``_measure_overlap_inprocess``): per variant x chunk count, the
+    fraction of a2a time hidden by the chunk pipeline, written into
+    ``json_path`` under ``"overlap"`` with requested *and* chosen chunk
+    counts as columns.  Pass ``overlap_variants=()`` to skip."""
     import json
 
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -261,6 +415,10 @@ def measured_schedule_ablation(device_count: int = 4, steps: int = 5,
         cmd += ["--partition-bytes", str(partition_bytes)]
     if grad_compression:
         cmd += ["--grad-compression", grad_compression]
+    if overlap_variants and overlap_chunks:
+        cmd += ["--overlap-variants", ",".join(overlap_variants),
+                "--overlap-chunks", ",".join(str(c) for c in overlap_chunks),
+                "--overlap-mode", "train"]
     p = subprocess.run(cmd, env=env, cwd=repo, capture_output=True,
                        text=True, timeout=1800)
     if p.returncode != 0:
@@ -279,6 +437,7 @@ def measured_schedule_ablation(device_count: int = 4, steps: int = 5,
             sweep.append((float(pb), float(us)))
         elif line.startswith("CHOSEN "):
             chosen = float(line.split()[1])
+    overlap = _parse_overlap_lines(p.stdout)
     sim = step_model_for(with_experts(GPT2_MOE, 16), SEQ, BATCH,
                          n_devices=16, hw=A100_IB)
     rows = []
@@ -302,6 +461,14 @@ def measured_schedule_ablation(device_count: int = 4, steps: int = 5,
         rows.append(("schedules/measured/speedup", 0.0,
                      f"baseline_us={base:.0f},lina_us={lina:.0f},"
                      f"measured_speedup={base / max(lina, 1e-9):.3f}"))
+    for o in overlap:
+        rows.append((f"schedules/overlap/{o['variant']}"
+                     f"-c{o['chunks_requested']}", o["us_per_call"],
+                     f"chunks_requested={o['chunks_requested']},"
+                     f"chunks_chosen={o['chunks_chosen']},"
+                     f"serial_us={o['serial_us']:.1f},"
+                     f"a2a_us={o['a2a_us']:.1f},"
+                     f"a2a_hidden_frac={o['a2a_hidden_frac']:.3f}"))
     if not os.path.isabs(json_path):
         json_path = os.path.join(repo, json_path)
     with open(json_path, "w") as fh:
@@ -314,6 +481,7 @@ def measured_schedule_ablation(device_count: int = 4, steps: int = 5,
             "microbatches": microbatches,
             "grad_compression": grad_compression,
             "rows": jrows,
+            "overlap": overlap,
         }, fh, indent=1)
     return rows
 
@@ -321,7 +489,9 @@ def measured_schedule_ablation(device_count: int = 4, steps: int = 5,
 def _worker_main(argv=None):
     import argparse
     ap = argparse.ArgumentParser()
-    ap.add_argument("--schedules", required=True)
+    ap.add_argument("--schedules", default="",
+                    help="comma-separated schedule names; empty skips the "
+                         "schedule timing (overlap-only worker run)")
     ap.add_argument("--steps", type=int, default=5)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=32)
@@ -332,18 +502,39 @@ def _worker_main(argv=None):
                     help="comma-separated micro-op sizes; when given, the "
                          "measured minimum overrides --partition-bytes")
     ap.add_argument("--grad-compression", default=None)
+    ap.add_argument("--overlap-variants", default="",
+                    help="comma-separated overlap variants "
+                         "(pipelined|pipelined+grouped|shortcut); empty "
+                         "skips the overlap microbench")
+    ap.add_argument("--overlap-chunks", default="",
+                    help="comma-separated requested chunk counts")
+    ap.add_argument("--overlap-mode", default="train",
+                    choices=["train", "infer"],
+                    help="train times forward+backward, infer forward only")
     args = ap.parse_args(argv)
-    sweep = tuple(float(s) for s in args.partition_sweep.split(",")) \
-        if args.partition_sweep else ()
-    rows, sweep_rows, chosen = _measure_schedules_inprocess(
-        args.schedules.split(","), args.steps, args.batch, args.seq,
-        args.microbatches, partition_bytes=args.partition_bytes,
-        grad_compression=args.grad_compression, partition_sweep=sweep)
-    for pb, us in sweep_rows:
-        print(f"SWEEP {pb:.0f} {us:.1f}", flush=True)
-    print(f"CHOSEN {chosen:.0f}", flush=True)
-    for sched, us, dp, ep, n_chunks in rows:
-        print(f"MEASURED {sched} {us:.1f} {dp} {ep} {n_chunks}", flush=True)
+    if args.schedules:
+        sweep = tuple(float(s) for s in args.partition_sweep.split(",")) \
+            if args.partition_sweep else ()
+        rows, sweep_rows, chosen = _measure_schedules_inprocess(
+            args.schedules.split(","), args.steps, args.batch, args.seq,
+            args.microbatches, partition_bytes=args.partition_bytes,
+            grad_compression=args.grad_compression, partition_sweep=sweep)
+        for pb, us in sweep_rows:
+            print(f"SWEEP {pb:.0f} {us:.1f}", flush=True)
+        print(f"CHOSEN {chosen:.0f}", flush=True)
+        for sched, us, dp, ep, n_chunks in rows:
+            print(f"MEASURED {sched} {us:.1f} {dp} {ep} {n_chunks}",
+                  flush=True)
+    if args.overlap_variants and args.overlap_chunks:
+        orows = _measure_overlap_inprocess(
+            args.overlap_variants.split(","),
+            tuple(int(c) for c in args.overlap_chunks.split(",")),
+            args.steps, args.batch, args.seq, mode=args.overlap_mode)
+        for (mode, variant, req, chosen_c, pipe_us, serial_us, a2a_us,
+             hidden) in orows:
+            print(f"OVERLAP {mode} {variant} {req} {chosen_c} "
+                  f"{pipe_us:.1f} {serial_us:.1f} {a2a_us:.1f} "
+                  f"{hidden:.4f}", flush=True)
 
 
 def table3_packing():

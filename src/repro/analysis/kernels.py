@@ -38,15 +38,22 @@ import dataclasses
 import os
 
 from repro.analysis.findings import Finding
+from repro.configs.base import MoEConfig
 from repro.configs.paper_models import (BERT2GPT2, BERT_LARGE, GPT2_MOE,
                                         TRANSFORMER_XL)
 from repro.core.gating import capacity
+from repro.core.microop import resolve_chunk_count
 from repro.kernels.dispatch import combine_vmem_bytes, dispatch_vmem_bytes
 from repro.kernels.tiling import (LANE, SUBLANE, VMEM_BUDGET_BYTES,
                                   block_and_pad, block_bytes, pad_to,
                                   sublane_for)
 
 PAPER_MODELS = (TRANSFORMER_XL, GPT2_MOE, BERT2GPT2, BERT_LARGE)
+
+# chunk count for the re-entrant micro-op pipeline variants: the default
+# MoEConfig.n_microops, resolved per shape exactly as the runtime does
+# (core.microop.resolve_chunk_count picks the largest divisor of C)
+PIPELINE_MICROOPS = MoEConfig().n_microops
 
 # token count for the static shape cases: global tokens at scale 1 (the
 # per-device a2a payload of the paper's 16-expert training runs), shrunk
@@ -236,8 +243,14 @@ def _eval_topk_gating(c: ShapeCase):
         ])]
 
 
-def _eval_dispatch_rows(c: ShapeCase):
-    br, r_pad = block_and_pad(c.R, 1024)
+def _chunk_capacity(c: ShapeCase) -> int:
+    """Per-chunk capacity of the micro-op pipeline at this shape: C split
+    into ``PIPELINE_MICROOPS`` uniform chunks, resolved like the runtime."""
+    return c.C // resolve_chunk_count(c.C, PIPELINE_MICROOPS)
+
+
+def _dispatch_rows_eval(c: ShapeCase, rows: int, variant: str) -> SiteEval:
+    br, r_pad = block_and_pad(rows, 1024)
     bx, t_pad = block_and_pad(c.T, 512)
     ev = SiteEval(
         "dispatch.py", "dispatch_rows", c.name,
@@ -253,15 +266,23 @@ def _eval_dispatch_rows(c: ShapeCase):
         outputs=[
             Block("out", (br, c.D), "float32", (grid_dim(0), CONST),
                   (r_pad, c.D)),
-        ])
+        ],
+        variant=variant)
     assert ev.footprint() == dispatch_vmem_bytes(br, bx, c.D), \
         "analyzer estimate diverged from kernels.dispatch.dispatch_vmem_bytes"
-    return [ev]
+    return ev
 
 
-def _eval_combine_rows(c: ShapeCase):
+def _eval_dispatch_rows(c: ShapeCase):
+    # full-buffer call plus the chunk-granular shape the re-entrant micro-op
+    # pipeline dispatches per landed chunk (R/n rows of the slot buffer)
+    return [_dispatch_rows_eval(c, c.R, ""),
+            _dispatch_rows_eval(c, c.E * _chunk_capacity(c), "chunk")]
+
+
+def _combine_rows_eval(c: ShapeCase, rows: int, variant: str) -> SiteEval:
     bt, t_pad = block_and_pad(c.T, 1024)
-    brf, r_pad = block_and_pad(c.R, 512)
+    brf, r_pad = block_and_pad(rows, 512)
     ev = SiteEval(
         "dispatch.py", "combine_rows", c.name,
         (t_pad // bt, r_pad // brf),
@@ -276,10 +297,16 @@ def _eval_combine_rows(c: ShapeCase):
         outputs=[
             Block("out", (bt, c.D), "float32", (grid_dim(0), CONST),
                   (t_pad, c.D)),
-        ])
+        ],
+        variant=variant)
     assert ev.footprint() == combine_vmem_bytes(bt, brf, c.D, c.K), \
         "analyzer estimate diverged from kernels.dispatch.combine_vmem_bytes"
-    return [ev]
+    return ev
+
+
+def _eval_combine_rows(c: ShapeCase):
+    return [_combine_rows_eval(c, c.R, ""),
+            _combine_rows_eval(c, c.E * _chunk_capacity(c), "chunk")]
 
 
 # the weighted replica split keeps only metadata resident: the [E, R]
@@ -327,12 +354,11 @@ def _eval_topk_positions(c: ShapeCase):
         ])]
 
 
-def _eval_grouped_ffn(c: ShapeCase):
-    # per-expert token extent is the dispatch capacity
-    bt, t_pad = block_and_pad(c.C, 256)
+def _grouped_ffn_eval(c: ShapeCase, cap: int, variant: str) -> SiteEval:
+    bt, t_pad = block_and_pad(cap, 256)
     bf, f_pad = block_and_pad(c.F, 512, sub=LANE)
     g3 = (grid_dim(0), grid_dim(1), CONST)
-    return [SiteEval(
+    return SiteEval(
         "moe_ffn.py", "grouped_ffn", c.name,
         (c.E, t_pad // bt, f_pad // bf),
         inputs=[
@@ -346,7 +372,16 @@ def _eval_grouped_ffn(c: ShapeCase):
         ],
         outputs=[
             Block("out", (1, bt, c.D), "float32", g3, (c.E, t_pad, c.D)),
-        ])]
+        ],
+        variant=variant)
+
+
+def _eval_grouped_ffn(c: ShapeCase):
+    # per-expert token extent is the dispatch capacity; the "chunk" variant
+    # is the re-entrant call the micro-op pipeline issues per landed a2a
+    # chunk (core.microop.pipelined_expert_ffn): same kernel, capacity C/n
+    return [_grouped_ffn_eval(c, c.C, ""),
+            _grouped_ffn_eval(c, _chunk_capacity(c), "chunk")]
 
 
 # the grouped-FFN backward (kernels/ops.py::_grouped_ffn_bwd) expresses

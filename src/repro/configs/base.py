@@ -30,6 +30,11 @@ class MoEConfig:
     # Lina knobs
     n_microops: int = 4           # a2a tensor-partition count (micro-ops)
     pipeline_ffn: bool = True     # pipeline expert FFN with a2a micro-ops
+    # ScMoE-style shortcut connection: the dense (shared-expert) branch is
+    # computed *inside* the MoE shard body, ordered under the dispatch-a2a
+    # shadow, and summed into the combine.  Requires shared weights (the
+    # model allocates them when shortcut is set, like shared_expert).
+    shortcut: bool = False
     experts_per_device: int = 1   # expert packing degree (power of two)
     # compute backend for the MoE hot paths (gating / grouped FFN / the
     # serving slot compute): "pallas" routes through repro.kernels.ops,
@@ -153,7 +158,7 @@ class ModelConfig:
                 e_f = self.moe.d_ff or f
                 per_expert = ffn_mult * d * e_f
                 total += n_moe * self.moe.n_experts * per_expert
-                if self.moe.shared_expert:
+                if self.moe.shared_expert or self.moe.shortcut:
                     total += n_moe * per_expert
         return int(total)
 

@@ -37,16 +37,33 @@ def _token_of(x) -> jax.Array:
     return jnp.real(leaf).reshape(-1)[0].astype(jnp.float32) * 0.0
 
 
+@jax.custom_jvp
+def _barrier_flat(flat: tuple, token: jax.Array) -> tuple:
+    out = lax.optimization_barrier(tuple(flat) + (token,))
+    return tuple(out[:-1])
+
+
+@_barrier_flat.defjvp
+def _barrier_flat_jvp(primals, tangents):
+    # ``optimization_barrier`` has no autodiff rule; the barrier is a
+    # scheduling edge, not math, so tangents pass straight through (the
+    # backward pass gets its own ordering from optim/reduce.py).
+    flat, token = primals
+    tflat, _ = tangents
+    return _barrier_flat(flat, token), tuple(tflat)
+
+
 def ordered_after(x, token: jax.Array):
     """Return ``x`` with a compile-time dependency on ``token``.
 
     ``optimization_barrier`` pins program order: XLA may still overlap the
     downstream collective with *compute*, but cannot hoist it before the
-    barrier input — i.e. before the a2a it must yield to.
+    barrier input — i.e. before the a2a it must yield to.  Differentiable
+    (pass-through tangents), so it is safe inside the forward pass.
     """
     flat, treedef = jax.tree_util.tree_flatten(x)
-    out = lax.optimization_barrier(tuple(flat) + (token,))
-    return jax.tree_util.tree_unflatten(treedef, out[:-1])
+    out = _barrier_flat(tuple(flat), token)
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 # ---------------------------------------------------------------------------
@@ -79,17 +96,31 @@ def all_to_all_ec_inverse(buf: jax.Array, axis: Axis, n_experts: int) -> jax.Arr
     return x.reshape(n_experts, c, d)
 
 
+def resolve_chunk_count(capacity: int, n_chunks: int) -> int:
+    """Largest divisor of ``capacity`` that is ≤ ``n_chunks``.
+
+    The paper's micro-ops are uniform, so the capacity dim must split
+    evenly.  A requested count that does not divide C is resolved — not
+    silently decremented inside the a2a — to the largest valid divisor;
+    callers surface the *chosen* count (benchmark rows record both).
+    """
+    capacity = int(capacity)
+    n = max(1, min(int(n_chunks), capacity))
+    while capacity % n:
+        n -= 1
+    return n
+
+
 def chunked_all_to_all(buf: jax.Array, axis: Axis, n_chunks: int,
                        inverse: bool = False, n_experts: int = 0) -> list:
-    """Partition [E, C, d] along C into ``n_chunks`` a2a micro-ops.
+    """Partition [E, C, d] along C into a2a micro-ops.
 
     Returns the list of exchanged chunks (callers pipeline compute between
-    them). Equal-size partitioning mirrors the paper's uniform micro-ops.
+    them); ``len()`` of the result is the *chosen* chunk count, resolved by
+    :func:`resolve_chunk_count`.  Equal-size partitioning mirrors the
+    paper's uniform micro-ops.
     """
-    c = buf.shape[1]
-    n_chunks = max(1, min(n_chunks, c))
-    while c % n_chunks:
-        n_chunks -= 1
+    n_chunks = resolve_chunk_count(buf.shape[1], n_chunks)
     pieces = jnp.split(buf, n_chunks, axis=1)
     fn = (lambda p: all_to_all_ec_inverse(p, axis, n_experts)) if inverse \
         else (lambda p: all_to_all_ec(p, axis))
@@ -99,8 +130,9 @@ def chunked_all_to_all(buf: jax.Array, axis: Axis, n_chunks: int,
 def pipelined_expert_ffn(buf: jax.Array, expert_fn: Callable, axis: Axis,
                          n_chunks: int, n_experts: int,
                          pipeline: bool = True) -> tuple:
-    """Fig. 8b: dispatch-a2a micro-ops pipelined with the expert FFN, then
-    combine-a2a micro-ops back.
+    """Fig. 8b as a double-buffered software pipeline: chunk k's expert FFN
+    overlaps chunk k+1's dispatch a2a, and chunk k's combine (return) a2a is
+    interleaved behind chunk k+1's dispatch a2a in the collective stream.
 
     buf:        local dispatch buffers [E, C, d] (E = global expert count).
     expert_fn:  [E_recv, n_tok, d] -> [E_recv, n_tok, d] — the local experts
@@ -108,18 +140,50 @@ def pipelined_expert_ffn(buf: jax.Array, expert_fn: Callable, axis: Axis,
                 expert identity is row % E_local... resolved by caller).
     Returns (combined local buffers [E, C, d], a2a_done_token).
 
+    Scheduling model (mirrors ``prioritized_chunked_reduce``): collectives
+    are chained through ``ordered_after`` tokens so they serialize among
+    themselves in issue order — one virtual comm stream — while each chunk's
+    FFN carries *no* ordering edge to the next dispatch and therefore fills
+    the gap under the in-flight a2a.  Per iteration the issue order is
+
+        dispatch-a2a(k+1)  →  expert_fn(k)  →  combine-a2a(k)
+
+    so the grouped FFN of chunk k runs in the shadow of chunk k+1's
+    dispatch, and chunk k's return a2a slots in right behind it.
+
     With ``pipeline=False`` this is the baseline: one a2a, full FFN, one a2a
     (the DeepSpeed schedule of Fig. 2).
     """
     if not pipeline:
         n_chunks = 1
-    recv_chunks = chunked_all_to_all(buf, axis, n_chunks)
-    out_chunks = []
-    for rc in recv_chunks:
+    n_chunks = resolve_chunk_count(buf.shape[1], n_chunks)
+    pieces = jnp.split(buf, n_chunks, axis=1)
+
+    # prologue: fill the pipeline with chunk 0's dispatch a2a.
+    recv = all_to_all_ec(pieces[0], axis)
+    comm_tok = _token_of(recv)
+    back = []
+    for k in range(n_chunks):
+        if k + 1 < n_chunks:
+            # issue chunk k+1's dispatch a2a on the comm stream *before*
+            # chunk k's FFN appears in program order; the FFN below has no
+            # edge to it, so XLA overlaps the two (paper §4.2).
+            nxt = ordered_after(pieces[k + 1], comm_tok)
+            recv_next = all_to_all_ec(nxt, axis)
+            comm_tok = _token_of(recv_next)
+        else:
+            recv_next = None
         # each received chunk: [ep*E_local, C/n, d]; FFN is token-granular so
-        # it can start as soon as the chunk lands (paper §4.2).
-        out_chunks.append(expert_fn(rc))
-    back = [all_to_all_ec_inverse(oc, axis, n_experts) for oc in out_chunks]
+        # it starts as soon as the chunk lands — re-entrant grouped_ffn call
+        # under the pallas backend, one kernel launch per landed chunk.
+        out_k = expert_fn(recv)
+        # chunk k's return a2a joins the comm stream behind chunk k+1's
+        # dispatch: interleaved, never ahead of it.
+        ret = all_to_all_ec_inverse(ordered_after(out_k, comm_tok), axis,
+                                    n_experts)
+        comm_tok = _token_of(ret)
+        back.append(ret)
+        recv = recv_next
     combined = jnp.concatenate(back, axis=1) if len(back) > 1 else back[0]
     return combined, _token_of(combined)
 

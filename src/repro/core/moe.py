@@ -95,7 +95,7 @@ def expert_ffn(wi, wu, wo, x, ffn_type: str = "swiglu",
 def _moe_shard_body(x, router, wi, wu, wo, *, cfg: MoEConfig, ffn_type: str,
                     dispatch_backend: str, ep_axis: str, dp_axes,
                     lina: bool, fsdp: bool = False, tp_axis: str | None = None,
-                    top_k: int | None = None):
+                    top_k: int | None = None, shortcut=None):
     """x: [T_local, d].  Expert weights arrive expert-sharded over ep_axis:
     wi/wu/wo have leading dim E_local = E / ep.  With ``fsdp`` they are
     additionally sharded over the dp axes on the hidden dim and gathered
@@ -135,11 +135,29 @@ def _moe_shard_body(x, router, wi, wu, wo, *, cfg: MoEConfig, ffn_type: str,
         out = out.reshape(e_local, ep, rows.shape[1], d_model)
         return out.transpose(1, 0, 2, 3).reshape(ep * e_local, rows.shape[1], d_model)
 
+    sc_out = None
+    if shortcut is not None:
+        # ScMoE shortcut branch: dense FFN on the *local* tokens with
+        # replicated weights.  Ordered after the dispatch buffer so it sits
+        # between dispatch and combine in program order — under the a2a
+        # shadow — but carries no edge into the collective chain itself, so
+        # the a2a micro-ops never wait on it.
+        sw_in, sw_up, sw_out = shortcut
+        xs = microop.ordered_after(x, microop._token_of(buf))
+        hs = xs @ sw_in
+        if ffn_type == "swiglu":
+            hs = jax.nn.silu(hs) * (xs @ sw_up)
+        else:
+            hs = jax.nn.gelu(hs)
+        sc_out = hs @ sw_out
+
     n_chunks = cfg.n_microops if lina else 1
     out_buf, a2a_token = microop.pipelined_expert_ffn(
         buf, ffn_rows, ep_axis, n_chunks, e, pipeline=lina and cfg.pipeline_ffn)
 
     y = comb(out_buf, g, e, cap)                                  # [T, d]
+    if sc_out is not None:
+        y = y + sc_out                     # summed into the combine (ScMoE)
     y = y.reshape(b_loc, s_loc, d_model)
     return y, g.aux_loss, g.expert_idx, g.router_probs, a2a_token
 
@@ -147,7 +165,7 @@ def _moe_shard_body(x, router, wi, wu, wo, *, cfg: MoEConfig, ffn_type: str,
 def moe_layer(mesh, x, params: MoEParams, cfg: MoEConfig, *,
               ffn_type: str = "swiglu", dispatch_backend: str = "scatter",
               lina: bool = True, fsdp: bool = False,
-              top_k: int | None = None) -> MoEOutput:
+              top_k: int | None = None, shortcut_params=None) -> MoEOutput:
     """x: [B, S, d].  Experts sharded over `model`; tokens sharded batch-over
     dp and sequence-over-`model` — the SAME layout sequence parallelism uses
     between blocks, so entering the MoE region costs no resharding, and each
@@ -180,11 +198,27 @@ def moe_layer(mesh, x, params: MoEParams, cfg: MoEConfig, *,
     wu_spec = wspec_i if has_wu else P()
     wu = params.wu if has_wu else jnp.zeros((), x.dtype)
 
+    # ScMoE shortcut weights ride along replicated (dense branch, no ep/tp
+    # sharding); dummy scalars when the variant is off.
+    has_sc = shortcut_params is not None
+    if has_sc:
+        sc_wi, sc_wu, sc_wo = shortcut_params
+    else:
+        sc_wi = sc_wu = sc_wo = None
+    has_sc_wu = has_sc and sc_wu is not None
+    dummy = jnp.zeros((), x.dtype)
+    sc_in = (sc_wi if has_sc else dummy, sc_wu if has_sc_wu else dummy,
+             sc_wo if has_sc else dummy)
+    sc_specs = (P(None, None) if has_sc else P(),
+                P(None, None) if has_sc_wu else P(),
+                P(None, None) if has_sc else P())
+
     aux_axes = (dp if bq else ()) + ((EP_AXIS,) if sq else ())
 
-    def wrapped(x, router, wi, wu, wo):
+    def wrapped(x, router, wi, wu, wo, sc_wi, sc_wu, sc_wo):
         wu_ = wu if has_wu else None
-        y, aux, eidx, probs, tok = body(x, router, wi, wu_, wo)
+        sc = (sc_wi, sc_wu if has_sc_wu else None, sc_wo) if has_sc else None
+        y, aux, eidx, probs, tok = body(x, router, wi, wu_, wo, shortcut=sc)
         # aux loss: tokens differ across every sharded axis -> mean over them
         if aux_axes:
             aux = lax.pmean(aux, aux_axes)
@@ -195,8 +229,8 @@ def moe_layer(mesh, x, params: MoEParams, cfg: MoEConfig, *,
     flat_spec = P(flat_axes or None, None)
     y, aux, eidx, probs, tok = shard_map(
         wrapped, mesh=mesh,
-        in_specs=(bspec, P(None, None), wspec_i, wu_spec, wspec_o),
+        in_specs=(bspec, P(None, None), wspec_i, wu_spec, wspec_o) + sc_specs,
         out_specs=(bspec, P(), flat_spec, flat_spec, P()),
         check_rep=False,
-    )(x, params.router, params.wi, wu, params.wo)
+    )(x, params.router, params.wi, wu, params.wo, *sc_in)
     return MoEOutput(y, aux, eidx, probs, tok)

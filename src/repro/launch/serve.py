@@ -59,6 +59,26 @@ def main(argv=None):
                          "config")
     ap.add_argument("--no-plan-cache", action="store_true",
                     help="ablation: re-plan every layer of every batch")
+    ap.add_argument("--n-microops", type=int, default=None,
+                    help="a2a tensor-partition count (MoEConfig.n_microops) "
+                         "for the profiling forward passes; non-divisors "
+                         "resolve to the largest valid divisor")
+    ap.add_argument("--pipeline-ffn", dest="pipeline_ffn", default=None,
+                    action="store_true",
+                    help="pipeline expert FFN with a2a micro-ops in the "
+                         "profiling forward passes")
+    ap.add_argument("--no-pipeline-ffn", dest="pipeline_ffn",
+                    action="store_false",
+                    help="baseline a2a -> FFN -> a2a (no micro-op pipeline)")
+    ap.add_argument("--shortcut", dest="shortcut", default=None,
+                    action="store_true",
+                    help="ScMoE shortcut-connected variant: allocate the "
+                         "dense shortcut branch and fuse it under the a2a "
+                         "shadow on training-style forwards (serve decode "
+                         "adds the same branch outside the plan dispatch)")
+    ap.add_argument("--no-shortcut", dest="shortcut", action="store_false",
+                    help="disable the shortcut variant even if the arch "
+                         "config enables it")
     ap.add_argument("--workload", default=None,
                     choices=sorted(SCENARIOS),
                     help="trace scenario (repro.sched.workloads); default "
@@ -82,11 +102,19 @@ def main(argv=None):
 
     cfg = get_config(args.arch)
     assert cfg.moe.enabled, "serve driver targets MoE archs"
-    if args.compute_backend is not None:
+    moe_over = {k: v for k, v in (
+        ("compute_backend", args.compute_backend),
+        ("n_microops", args.n_microops),
+        ("pipeline_ffn", args.pipeline_ffn),
+        ("shortcut", args.shortcut)) if v is not None}
+    if moe_over:
         import dataclasses
         cfg = dataclasses.replace(
-            cfg, moe=dataclasses.replace(cfg.moe,
-                                         compute_backend=args.compute_backend))
+            cfg, moe=dataclasses.replace(cfg.moe, **moe_over))
+    print(f"moe knobs: n_microops={cfg.moe.n_microops} "
+          f"pipeline_ffn={cfg.moe.pipeline_ffn} "
+          f"shortcut={cfg.moe.shortcut} "
+          f"compute_backend={cfg.moe.compute_backend}", flush=True)
     params = lm_mod.init_params(cfg, jax.random.PRNGKey(args.seed))
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                       global_batch=4, seed=args.seed)

@@ -50,6 +50,25 @@ def main(argv=None):
                     choices=["einsum", "scatter", "pallas"],
                     help="token dispatch/combine backend "
                          "(core.dispatch.BACKENDS)")
+    ap.add_argument("--n-microops", type=int, default=None,
+                    help="a2a tensor-partition count (MoEConfig.n_microops);"
+                         " non-divisors of the capacity resolve to the "
+                         "largest valid divisor — the trainer logs the "
+                         "requested value per step")
+    ap.add_argument("--pipeline-ffn", dest="pipeline_ffn", default=None,
+                    action="store_true",
+                    help="pipeline expert FFN with a2a micro-ops (Fig. 8b)")
+    ap.add_argument("--no-pipeline-ffn", dest="pipeline_ffn",
+                    action="store_false",
+                    help="baseline: one a2a, full FFN, one a2a")
+    ap.add_argument("--shortcut", dest="shortcut", default=None,
+                    action="store_true",
+                    help="ScMoE shortcut-connected variant: dense branch "
+                         "computes under the a2a shadow, summed into the "
+                         "combine")
+    ap.add_argument("--no-shortcut", dest="shortcut", action="store_false",
+                    help="disable the shortcut variant even if the arch "
+                         "config enables it")
     ap.add_argument("--mesh", default=None,
                     help="data x model mesh, e.g. 2x4 (needs that many "
                          "devices; on CPU force them with XLA_FLAGS="
@@ -77,7 +96,10 @@ def main(argv=None):
                          else args.schedule,
                          partition_bytes=args.partition_bytes,
                          grad_compression=args.grad_compression,
-                         dispatch_backend=args.dispatch_backend)
+                         dispatch_backend=args.dispatch_backend,
+                         n_microops=args.n_microops,
+                         pipeline_ffn=args.pipeline_ffn,
+                         shortcut=args.shortcut)
     mesh = None
     if args.mesh:
         from repro.core import axes

@@ -43,6 +43,22 @@ def rope(q, k, positions, theta: float = 10_000.0):
     return rot(q), rot(k)
 
 
+def ffn_branch(x, w_in, w_up, w_out, ffn_type: str):
+    """The bare dense-FFN math (no sharding hints): swiglu or gelu.
+
+    Single source of truth for the dense branch so the shortcut-connected
+    MoE variant (ScMoE — the branch fused into ``core.moe._moe_shard_body``
+    under the a2a shadow) and the outer shared-expert add compute the exact
+    same function; the numerical-equivalence tests rely on that.
+    """
+    h = x @ w_in
+    if ffn_type == "swiglu":
+        h = jax.nn.silu(h) * (x @ w_up)
+    else:
+        h = jax.nn.gelu(h)
+    return h @ w_out
+
+
 def axis_size(mesh, axes) -> int:
     if axes is None:
         return 1

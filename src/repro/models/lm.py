@@ -165,7 +165,8 @@ def init_params(cfg: ModelConfig, key) -> LMParams:
                                   cfg.moe.n_experts, cfg.ffn_type, dtype) \
                 if cfg.moe.enabled else None
             shared = _init_ffn(k4, d, cfg.moe.d_ff or cfg.d_ff, cfg.ffn_type,
-                               dtype) if cfg.moe.shared_expert else None
+                               dtype) \
+                if (cfg.moe.shared_expert or cfg.moe.shortcut) else None
             return GroupParams(attn, jnp.ones((every, d), dtype),
                                jnp.ones((every, d), dtype), ffn, moe, shared)
 
@@ -230,14 +231,21 @@ def _group_apply(mesh, cfg, gp: GroupParams, x, *, lina, serve_plan=None,
                                               top_k=serve_top_k)
                 moe_y = y2.reshape(b, s, d)
                 a = jnp.zeros((), jnp.float32)
+                sc_fused = False
             else:
+                # ScMoE variant: the dense shortcut branch is fused into the
+                # MoE shard body so it computes under the a2a shadow and is
+                # summed into the combine (same math as the outer add).
+                sc = gp.shared if (cfg.moe.shortcut and
+                                   gp.shared is not None) else None
                 out = moe_layer(mesh, h, gp.moe, cfg.moe,
                                 ffn_type=cfg.ffn_type,
                                 dispatch_backend=dispatch_backend,
-                                lina=lina, fsdp=fsdp)
+                                lina=lina, fsdp=fsdp, shortcut_params=sc)
                 moe_y, a, eidx = out.y, out.aux_loss, out.expert_idx
                 tok = tok + out.a2a_token
-            if gp.shared is not None:
+                sc_fused = sc is not None
+            if gp.shared is not None and not sc_fused:
                 moe_y = moe_y + _ffn_apply(gp.shared, h, cfg.ffn_type,
                                            mesh, cfg.tensor_parallel)
             x = x + moe_y

@@ -16,7 +16,7 @@ Production behaviors exercised here (and in tests):
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Callable, Optional
 
 import jax
@@ -56,6 +56,13 @@ class TrainerConfig:
     # (jnp production), "einsum" (oracle), or "pallas" (fused kernels —
     # pairs with MoEConfig.compute_backend="pallas")
     dispatch_backend: str = "scatter"
+    # Overlap knobs (None = keep the model config's values).  Applied onto
+    # ``model_cfg.moe`` at construction so CLI flags (launch/train.py) reach
+    # the shard-map body; the effective values are logged per step like
+    # ``schedule`` is.
+    n_microops: Optional[int] = None
+    pipeline_ffn: Optional[bool] = None
+    shortcut: Optional[bool] = None
     fail_at_step: Optional[int] = None       # failure injection (tests)
     straggler_factor: float = 3.0
     pack_warmup: int = 10                    # paper: packing decided at step 10
@@ -65,6 +72,13 @@ class TrainerConfig:
 class Trainer:
     def __init__(self, model_cfg: ModelConfig, data_cfg: DataConfig,
                  opt_cfg: AdamWConfig, cfg: TrainerConfig, mesh=None):
+        moe_over = {k: v for k, v in (("n_microops", cfg.n_microops),
+                                      ("pipeline_ffn", cfg.pipeline_ffn),
+                                      ("shortcut", cfg.shortcut))
+                    if v is not None}
+        if moe_over:
+            model_cfg = replace(model_cfg,
+                                moe=replace(model_cfg.moe, **moe_over))
         self.model_cfg = model_cfg
         self.data_cfg = data_cfg
         self.opt_cfg = opt_cfg
@@ -130,10 +144,16 @@ class Trainer:
             if len(times) > 5 and dt > self.cfg.straggler_factor * med:
                 self.straggler_events.append({"step": step, "dt": dt,
                                               "median": med})
-            # per-schedule step time: the measured ablation keys on this
+            # per-schedule step time: the measured ablation keys on this;
+            # overlap knobs logged alongside so ablations over
+            # n_microops/pipeline/shortcut are attributable per step
+            moe = self.model_cfg.moe
             self.metrics_log.append({"step": step, **m, "dt": dt,
                                      "schedule": self.cfg.schedule or
-                                     "implicit"})
+                                     "implicit",
+                                     "n_microops": moe.n_microops,
+                                     "pipeline_ffn": moe.pipeline_ffn,
+                                     "shortcut": moe.shortcut})
             if step == self.cfg.pack_warmup and self.model_cfg.moe.enabled:
                 self._decide_packing()
             if on_step:
