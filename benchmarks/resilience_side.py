@@ -1,0 +1,252 @@
+"""Chaos benchmark: seeded fault injection over drifting-popularity traces.
+
+Each trace (``drift``, ``flash``) is replayed through three copies of the
+full autoscaled serving stack (AdaptiveScheduler + two-phase MoEServer +
+continuous-batching engine, the ``autoscale_side`` configuration):
+
+  fault-free       no faults — the recovery reference and the sanity bar;
+  degradation-on   the seeded fault schedule fires AND the degradation
+                   ladder is engaged: detected device failures are
+                   reported (``AdaptiveScheduler.fail_devices`` →
+                   route-weight masking, PlanCache device invalidation,
+                   device-masked replanning), admission control is armed
+                   (bounded queue + deadline shedding + client retry);
+  naive            the IDENTICAL fault schedule fires, but failures are
+                   never reported, the queue is unbounded and nothing is
+                   shed — the stack keeps routing into the dead device.
+
+The schedule per trace is deterministic (seeded): one permanent
+single-device failure mid-trace (the headline scenario), an overload
+burst, a transient telemetry-corruption window and a planner-crash window
+(the latter two exercise the ALWAYS-ON rungs — telemetry validation and
+the planner fallback ladder — which protect both variants by design).
+
+Reported per variant:
+  * p50/p95 request latency (modeled virtual-clock methodology of
+    ``autoscale_side``: measured loads, modeled service time — a dead
+    device inflates a step by the token share still routed onto it);
+  * the admission ledger: completed / shed(deadline) / shed(rejected),
+    and the hard ACCOUNTING INVARIANT offered == completed + shed —
+    ``dropped`` (silent losses) must be exactly 0 or the benchmark raises;
+  * recovery: steps after the device failure until the rolling p95 of the
+    step's FAIL-SLOW MULTIPLIER (modeled service time relative to the
+    same step fault-free — the injector logs it per step) re-enters 1.2x
+    (None = never recovered).  The multiplier — not request latency — is
+    the recovery clock: it is the exact same-batch fault-free
+    counterfactual, and it is insensitive to the queueing backlog the
+    burst leaves behind (which the admission ledger accounts separately).
+    Degradation earns its recovery in this clock only by actually moving
+    routed load off the dead device; naive keeps paying ~1 + share *
+    (magnitude - 1) forever.
+
+The verdict the chaos suite gates on: degradation-on recovers within the
+window and sheds explicitly; naive keeps paying the fail-slow penalty for
+the rest of the trace (and recovers late or never).
+
+Full run writes ``BENCH_resilience.json`` (committed); ``--smoke`` writes
+``BENCH_resilience.smoke.json`` (gitignored, uploaded by CI, gated on
+dropped == 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.autoscale_side import (MAX_PACK, N_EXPERTS,
+                                       _make_service_model, _skewed_smoke)
+from repro.configs import TRANSFORMER_XL, with_experts
+from repro.data import DataConfig, SyntheticLM
+from repro.resilience import Fault, FaultInjector, FaultSchedule
+from repro.runtime.engine import (EngineConfig, ServingEngine, simulate,
+                                  summarize_results)
+from repro.runtime.server import MoEServer, ServerConfig, profile_from_training
+from repro.sched import (AdaptiveScheduler, ControllerConfig, generate_trace,
+                         get_spec)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+JSON_PATH = "BENCH_resilience.json"
+
+FAIL_STEP = 6                 # engine step the device failure fires at
+FAIL_DEVICE = 1
+FAIL_MAGNITUDE = 8.0          # fail-slow service-time multiplier
+RECOVERY_TOL = 1.2            # "recovered" = rolling p95 of the step's
+#                               fail-slow multiplier within 20% of 1.0
+RECOVERY_WINDOW = 4           # steps per rolling-p95 window
+
+
+def _fault_schedule(n_steps: int, burst: int) -> FaultSchedule:
+    """The per-trace chaos schedule (deterministic, step-keyed)."""
+    return FaultSchedule([
+        Fault("device_failure", FAIL_STEP, duration=-1, device=FAIL_DEVICE,
+              magnitude=FAIL_MAGNITUDE),
+        Fault("overload", FAIL_STEP + 2, n_requests=burst),
+        Fault("telemetry", FAIL_STEP + 4, duration=3, layer=-1),
+        Fault("planner_crash", FAIL_STEP + 6, duration=2),
+    ])
+
+
+def _recovery_steps(penalty_log, fail_step: int):
+    """Steps after the failure until the rolling ``RECOVERY_WINDOW``-step
+    p95 of the fail-slow multiplier is back within ``RECOVERY_TOL`` of
+    1.0 (= the same step fault-free).  Queueing backlog is invisible here
+    by construction — this clock measures how long the stack keeps PAYING
+    for the dead device, which is the degradation ladder's job to stop.
+    None = never recovered."""
+    series = [(s, p) for s, p in penalty_log if s >= fail_step]
+    for i, (step, _) in enumerate(series):
+        window = [p for _, p in series[max(0, i - RECOVERY_WINDOW + 1):i + 1]]
+        if float(np.percentile(window, 95)) <= RECOVERY_TOL:
+            return max(0, step - fail_step)
+    return None
+
+
+def _run_variant(mode, cfg, full, params, prof, trace, seq, max_new_tokens,
+                 schedule, ctrl_kwargs, retry_backoff_s, max_queue,
+                 deadline_s):
+    """One chaos replay.  ``mode``: fault-free | degradation-on | naive."""
+    server = MoEServer(cfg, params, prof,
+                       ServerConfig(path_len=3, schedule_policy="lina",
+                                    max_pack=MAX_PACK))
+    scheduler = AdaptiveScheduler(server, ControllerConfig(**ctrl_kwargs))
+    degraded = mode == "degradation-on"
+    ecfg = EngineConfig(max_batch_tokens=4 * seq, max_batch_requests=8,
+                        max_queue=max_queue if degraded else 0,
+                        deadline_s=deadline_s if degraded else 0.0)
+    injector = None
+    if mode != "fault-free":
+        injector = FaultInjector(schedule, resilience=degraded, rng_seed=3,
+                                 vocab_size=cfg.vocab_size,
+                                 burst_seq_len=seq,
+                                 burst_max_new_tokens=max_new_tokens)
+    engine = ServingEngine(
+        server, ecfg, scheduler=scheduler,
+        service_model=_make_service_model(full, server.n_dev,
+                                          ecfg.max_batch_tokens,
+                                          lina=False, scheduler=scheduler),
+        fault_injector=injector)
+    t0 = time.perf_counter()
+    results = simulate(engine, trace, time_scale=0.0,
+                       max_new_tokens=max_new_tokens,
+                       retry_backoff_s=retry_backoff_s if degraded else 0.0)
+    wall = time.perf_counter() - t0
+    m = summarize_results(results, engine=engine)
+
+    offered = len(trace) + (injector.injected if injector else 0)
+    shed = len(engine.shed_records)
+    dropped = offered - len(results) - shed
+    # the chaos suite's hard invariant: degraded means EXPLICITLY shed,
+    # never silently lost — in any mode, faulted or not
+    if dropped != 0:
+        raise AssertionError(
+            f"{mode}: {dropped} requests silently dropped "
+            f"(offered={offered}, completed={len(results)}, shed={shed})")
+
+    out = {
+        "p50_ms": m["latency_p50"] * 1e3, "p95_ms": m["latency_p95"] * 1e3,
+        "ttft_p95_ms": m["ttft_p95"] * 1e3,
+        "offered": offered, "completed": len(results),
+        "shed_deadline": m["shed_deadline"],
+        "shed_rejected": m["shed_rejected"],
+        "dropped": dropped,
+        "wall_us_per_req": wall / max(len(results), 1) * 1e6,
+        "degrade_stats": dict(server.degrade_stats),
+        "telemetry_errors": dict(scheduler.bus.errors),
+        "dead_devices": sorted(server.dead_devices),
+    }
+    if injector is not None:
+        out["faults"] = injector.report()
+    return out, injector
+
+
+def resilience_benchmark(n_requests=48, seq=32, rate_hz=12.0,
+                         max_new_tokens=8, profile_batches=4,
+                         traces=("drift", "flash"), burst=48,
+                         max_queue=24, deadline_s=0.75,
+                         retry_backoff_s=0.02, interval=4,
+                         json_path: str = JSON_PATH):
+    """One row per (trace, variant) + a verdict row per trace; the same
+    seeded schedule replays against degradation-on and naive."""
+    cfg, params = _skewed_smoke(TRANSFORMER_XL, N_EXPERTS)
+    full = with_experts(TRANSFORMER_XL, N_EXPERTS)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                      global_batch=4, seed=1)
+    ds = SyntheticLM(dcfg)
+    prof = profile_from_training(
+        cfg, params, (ds.batch(i) for i in range(profile_batches)),
+        path_len=3)
+    ctrl_kwargs = dict(interval=interval, hysteresis=0.1, headroom=1.0,
+                       min_observations=2)
+
+    rows = []
+    jtraces = {}
+    for tname in traces:
+        spec = get_spec(tname, n_requests=n_requests, seq=seq,
+                        rate_hz=rate_hz, seed=7)
+        trace = generate_trace(spec, cfg.vocab_size)
+        schedule = _fault_schedule(n_steps=n_requests, burst=burst)
+        res, injectors = {}, {}
+        for mode in ("fault-free", "degradation-on", "naive"):
+            r, inj = _run_variant(
+                mode, cfg, full, params, prof, trace, seq, max_new_tokens,
+                schedule, ctrl_kwargs, retry_backoff_s, max_queue,
+                deadline_s)
+            res[mode], injectors[mode] = r, inj
+
+        for mode in ("degradation-on", "naive"):
+            log = injectors[mode].penalty_log
+            rec = _recovery_steps(log, FAIL_STEP)
+            res[mode]["recovery_steps"] = rec
+            res[mode]["recovered"] = rec is not None
+            post = [p for s, p in log if s >= FAIL_STEP]
+            res[mode]["post_fault_penalty_p95"] = \
+                float(np.percentile(post, 95)) if post else float("nan")
+        for mode in ("fault-free", "degradation-on", "naive"):
+            r = res[mode]
+            extra = ""
+            if "recovery_steps" in r:
+                extra = (f",recovery_steps={r['recovery_steps']},"
+                         f"shed={r['shed_deadline'] + r['shed_rejected']},"
+                         f"dropped={r['dropped']}")
+            rows.append((
+                f"resilience/{tname}-{mode}", r["wall_us_per_req"],
+                f"p50_ms={r['p50_ms']:.1f},p95_ms={r['p95_ms']:.1f}{extra}"))
+
+        deg, nai = res["degradation-on"], res["naive"]
+        verdict = {
+            "no_silent_drops": deg["dropped"] == 0 and nai["dropped"] == 0,
+            "degraded_recovers": deg["recovered"],
+            "degraded_p95_beats_naive": deg["p95_ms"] < nai["p95_ms"],
+            "naive_recovers": nai["recovered"],
+        }
+        rows.append((f"resilience/{tname}-verdict", 0.0,
+                     ",".join(f"{k}={v}" for k, v in verdict.items())))
+        jtraces[tname] = {
+            "spec": dataclasses.asdict(spec),
+            "schedule": [dataclasses.asdict(f) for f in schedule.faults],
+            "variants": res,
+            "verdict": verdict,
+        }
+
+    if not os.path.isabs(json_path):
+        json_path = os.path.join(REPO_ROOT, json_path)
+    with open(json_path, "w") as fh:
+        json.dump({
+            "model": f"transformer-xl-{N_EXPERTS}e(smoke)",
+            "n_devices": N_EXPERTS,
+            "fail_step": FAIL_STEP, "fail_device": FAIL_DEVICE,
+            "fail_magnitude": FAIL_MAGNITUDE,
+            "recovery_tolerance": RECOVERY_TOL,
+            "admission": {"max_queue": max_queue, "deadline_s": deadline_s,
+                          "retry_backoff_s": retry_backoff_s},
+            "latency_model": "inference_model.InferenceLayerModel@A100_IB "
+                             "with fail-slow multiplier on dead/straggler "
+                             "token share, time_scale=0",
+            "max_new_tokens": max_new_tokens,
+            "traces": jtraces,
+        }, fh, indent=1)
+    rows.append(("resilience/json", 0.0, json_path))
+    return rows

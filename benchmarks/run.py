@@ -42,14 +42,20 @@ SMOKE_KWARGS = {
                       max_new_tokens=3, profile_batches=2,
                       traces=("drift", "flash"), warm=False,
                       json_path="BENCH_autoscale.smoke.json"),
+    "resilience": dict(n_requests=20, seq=12, rate_hz=12.0,
+                       max_new_tokens=3, profile_batches=2,
+                       traces=("drift",), burst=24, max_queue=12,
+                       json_path="BENCH_resilience.smoke.json"),
 }
 
 
 def all_benchmarks():
-    from benchmarks import train_side, infer_side, kernel_side, autoscale_side
+    from benchmarks import (train_side, infer_side, kernel_side,
+                            autoscale_side, resilience_side)
     return [
         ("kernels", kernel_side.kernels_benchmark),
         ("autoscale", autoscale_side.autoscale_benchmark),
+        ("resilience", resilience_side.resilience_benchmark),
         ("table1", train_side.table1_a2a_fraction),
         ("fig10", train_side.fig10_training_speedup),
         ("fig14", train_side.fig14_design_ablation),

@@ -2,6 +2,9 @@
 
   * atomic: write to <dir>.tmp then rename — a killed job never leaves a
     half checkpoint that restart would read;
+  * checksummed: the manifest records a CRC32 per array, verified on load,
+    so a torn/bit-rotted write is detected instead of silently restored;
+    ``restore_latest`` falls back to the newest step that verifies;
   * keep-last-k garbage collection;
   * layout-free storage: leaves are saved as host numpy in the LOGICAL
     (unsharded) layout plus a treedef manifest, so restore can re-shard to
@@ -18,10 +21,19 @@ import json
 import os
 import re
 import shutil
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+class CorruptCheckpointError(ValueError):
+    """A checkpoint failed checksum/shape verification on load."""
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
 
 
 def _flatten_with_paths(tree):
@@ -48,22 +60,36 @@ def save_pytree(tree, directory: str):
         arrays[name] = np.asarray(jax.device_get(leaf))
         manifest.append({"key": key, "name": name,
                          "dtype": str(arrays[name].dtype),
-                         "shape": list(arrays[name].shape)})
+                         "shape": list(arrays[name].shape),
+                         "crc32": _crc(arrays[name])})
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(directory):
         shutil.rmtree(directory)
-    os.rename(tmp, directory)
+    os.replace(tmp, directory)
 
 
-def load_pytree(directory: str, like, shardings=None):
+def load_pytree(directory: str, like, shardings=None, verify: bool = True):
     """Restore into the structure of ``like``; optionally device_put with
     ``shardings`` (a pytree of NamedSharding) — elastic resharding happens
-    here, on load, regardless of the mesh the checkpoint was written on."""
-    z = np.load(os.path.join(directory, "arrays.npz"))
-    with open(os.path.join(directory, "manifest.json")) as f:
-        manifest = json.load(f)
+    here, on load, regardless of the mesh the checkpoint was written on.
+
+    With ``verify`` (default), every array's CRC32 is checked against the
+    manifest; a mismatch (torn write, bit rot) raises
+    ``CorruptCheckpointError`` — which ``restore_latest`` catches to fall
+    back to an older step.  Pre-checksum checkpoints (no ``crc32`` field)
+    load unverified."""
+    import zipfile
+    try:
+        z = np.load(os.path.join(directory, "arrays.npz"))
+        with open(os.path.join(directory, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError, KeyError, zipfile.BadZipFile,
+            json.JSONDecodeError) as e:
+        raise CorruptCheckpointError(f"{directory}: unreadable ({e})") from e
 
     def restore_dtype(arr, want: str):
         # np.savez stores ml_dtypes (bfloat16, float8_*) as raw void bytes;
@@ -73,8 +99,17 @@ def load_pytree(directory: str, like, shardings=None):
             arr = arr.view(jnp.dtype(want))
         return arr
 
-    by_key = {m["key"]: restore_dtype(z[m["name"]], m["dtype"])
-              for m in manifest}
+    by_key = {}
+    for m in manifest:
+        try:
+            raw = z[m["name"]]
+        except (KeyError, ValueError, OSError, zipfile.BadZipFile) as e:
+            raise CorruptCheckpointError(
+                f"{directory}: missing/unreadable array {m['key']!r}") from e
+        if verify and "crc32" in m and _crc(raw) != m["crc32"]:
+            raise CorruptCheckpointError(
+                f"{directory}: checksum mismatch on {m['key']!r}")
+        by_key[m["key"]] = restore_dtype(raw, m["dtype"])
     flat, treedef = _flatten_with_paths(like)
     leaves = []
     for key, leaf in flat:
@@ -97,6 +132,7 @@ class CheckpointManager:
     def __init__(self, root: str, keep: int = 3):
         self.root = root
         self.keep = keep
+        self.corrupt_steps: list = []   # steps restore_latest skipped
         os.makedirs(root, exist_ok=True)
 
     def _dir(self, step: int) -> str:
@@ -120,11 +156,17 @@ class CheckpointManager:
         for old in self.steps()[: -self.keep]:
             shutil.rmtree(self._dir(old), ignore_errors=True)
 
-    def restore(self, step: int, like: Any, shardings=None):
-        return load_pytree(self._dir(step), like, shardings)
+    def restore(self, step: int, like: Any, shardings=None,
+                verify: bool = True):
+        return load_pytree(self._dir(step), like, shardings, verify=verify)
 
     def restore_latest(self, like: Any, shardings=None):
-        s = self.latest_step()
-        if s is None:
-            return None, None
-        return s, self.restore(s, like, shardings)
+        """Restore the newest step that passes verification, walking past
+        corrupted/torn checkpoints (recorded in ``corrupt_steps``) instead
+        of crashing on them.  Returns (None, None) when nothing loads."""
+        for s in reversed(self.steps()):
+            try:
+                return s, self.restore(s, like, shardings)
+            except CorruptCheckpointError:
+                self.corrupt_steps.append(s)
+        return None, None

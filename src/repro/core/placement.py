@@ -71,8 +71,21 @@ def identity_plan(n_experts: int, n_devices: int, max_pack: int = 4,
     return PlacementPlan(slot, rep, np.ones((n_experts,), np.int32), pop)
 
 
+def _poison_dead_bins(bin_load: np.ndarray, bin_count: np.ndarray,
+                      dead_devices, max_pack: int) -> int:
+    """Mark dead devices as full/infinitely loaded so every placement loop
+    skips them without special-casing; returns the live device count."""
+    dead = sorted(int(d) for d in (dead_devices or ()))
+    for d in dead:
+        if 0 <= d < bin_count.shape[0]:
+            bin_count[d] = max_pack
+            bin_load[d] = np.inf
+    return bin_count.shape[0] - len(dead)
+
+
 def plan_placement(popularity: np.ndarray, n_devices: int, max_pack: int = 4,
-                   max_replicas: int = 0) -> PlacementPlan:
+                   max_replicas: int = 0,
+                   dead_devices=frozenset()) -> PlacementPlan:
     """Phase-1 planner (Eq. 1 + FFD).
 
     n_e = N * pop_e devices for expert e; experts with n_e >= 1 are
@@ -80,16 +93,24 @@ def plan_placement(popularity: np.ndarray, n_devices: int, max_pack: int = 4,
     first-fit-decreasing (item size = n_e, bin capacity = 1 device-worth of
     throughput, at most ``max_pack`` experts per device §6.2); experts not in
     any top-k list (pop 0) go to remaining free slots, else randomly.
+
+    ``dead_devices`` masks failed devices out of the placement entirely
+    (degradation path): no expert is placed on them, and the replica budget
+    shrinks to the surviving slots.
     """
     e = popularity.shape[0]
     pop = np.asarray(popularity, np.float64)
     pop = pop / max(pop.sum(), 1e-12)
-    n_e = pop * n_devices
     max_replicas = max_replicas or max_pack
 
     slot_expert = np.full((n_devices, max_pack), -1, np.int32)
     bin_load = np.zeros((n_devices,), np.float64)
     bin_count = np.zeros((n_devices,), np.int32)
+    live = _poison_dead_bins(bin_load, bin_count, dead_devices, max_pack)
+    # over-subscription (e > live slots) keeps the legacy behavior: the
+    # replica budget goes negative and the coldest experts are shed to
+    # zero replicas (weighted_route drops their tokens on the -1 slot id)
+    n_e = pop * live
     replicas: List[List[int]] = [[] for _ in range(e)]
 
     def place(ex: int, load: float) -> None:
@@ -115,11 +136,11 @@ def plan_placement(popularity: np.ndarray, n_devices: int, max_pack: int = 4,
 
     # 1) popular experts first, replicated proportionally (FFD = decreasing);
     # replica budget reserves one sub-slot per expert so nobody is orphaned.
-    replica_budget = n_devices * max_pack - e
+    replica_budget = live * max_pack - e
     order = np.argsort(-n_e)
     for ex in order:
         ex = int(ex)
-        r = int(min(max(1, round(n_e[ex])), max_replicas, n_devices,
+        r = int(min(max(1, round(n_e[ex])), max_replicas, live,
                     1 + replica_budget))
         replica_budget -= r - 1
         for _ in range(r):
@@ -156,8 +177,8 @@ def shed_to_budget(replica_counts: np.ndarray, popularity: np.ndarray,
 def plan_from_replicas(popularity: np.ndarray, replica_counts: np.ndarray,
                        n_devices: int, max_pack: int = 4,
                        rep_width: int = 0,
-                       prev: Optional[PlacementPlan] = None
-                       ) -> PlacementPlan:
+                       prev: Optional[PlacementPlan] = None,
+                       dead_devices=frozenset()) -> PlacementPlan:
     """Build a plan honoring *explicit* per-expert replica counts — the
     constructor the adaptive controller (``repro.sched.controller``) uses,
     where Eq. 1's ``round(N * pop_e)`` is replaced by telemetry-driven
@@ -179,19 +200,30 @@ def plan_from_replicas(popularity: np.ndarray, replica_counts: np.ndarray,
     ``rep_width`` fixes the replica-table width (default ``n_devices``) so
     controller-emitted plans keep a static shape across swaps and never
     force a dispatch recompile.
+
+    ``dead_devices`` (degradation path) removes failed devices from the
+    placement: retained-from-``prev`` replicas on dead devices are dropped,
+    nothing new lands there, and both the per-expert clip and the slot
+    budget shrink to the surviving devices.
     """
     pop = np.asarray(popularity, np.float64)
     pop = pop / max(pop.sum(), 1e-12)
     e = pop.shape[0]
-    r = np.clip(np.asarray(replica_counts, np.int64), 1, n_devices)
-    budget = n_devices * max_pack
-    assert budget >= e, "not enough slots to host every expert once"
+    dead = {int(d) for d in (dead_devices or ()) if 0 <= d < n_devices}
+    live = n_devices - len(dead)
+    r = np.clip(np.asarray(replica_counts, np.int64), 1, max(live, 1))
+    budget = live * max_pack
+    if budget < e:
+        raise ValueError(f"{live} live devices x {max_pack} slots cannot "
+                         f"host {e} experts")
     r = shed_to_budget(r, pop, budget)
     rep_width = rep_width or n_devices
 
     keep: List[List[int]] = [[] for _ in range(e)]
     if prev is not None and prev.n_devices == n_devices:
         for d in range(n_devices):
+            if d in dead:
+                continue
             for ex in prev.slot_expert[d]:
                 ex = int(ex)
                 if ex >= 0 and len(keep[ex]) < int(r[ex]) \
@@ -201,6 +233,7 @@ def plan_from_replicas(popularity: np.ndarray, replica_counts: np.ndarray,
     slot_expert = np.full((n_devices, max_pack), -1, np.int32)
     bin_load = np.zeros((n_devices,), np.float64)
     bin_count = np.zeros((n_devices,), np.int32)
+    _poison_dead_bins(bin_load, bin_count, dead, max_pack)
     replicas: List[List[int]] = [[] for _ in range(e)]
 
     def assign(ex: int, d: int, share: float) -> None:
@@ -310,6 +343,7 @@ class PlanCacheStats:
     hits: int = 0
     misses: int = 0
     invalidations: int = 0      # misses caused by popularity drift
+    device_invalidations: int = 0   # entries dropped by a device failure
 
     @property
     def reuse_rate(self) -> float:
@@ -348,6 +382,19 @@ class PlanCache:
 
     def store(self, layer: int, plan: PlacementPlan) -> None:
         self._plans[layer] = plan
+
+    def invalidate_devices(self, dead_devices) -> int:
+        """Drop every cached plan that places an expert on a dead device —
+        the failure-time companion of the drift invalidation.  Returns the
+        number of entries dropped."""
+        dead = [int(d) for d in dead_devices]
+        doomed = [layer for layer, plan in self._plans.items()
+                  if any(0 <= d < plan.n_devices
+                         and (plan.slot_expert[d] >= 0).any() for d in dead)]
+        for layer in doomed:
+            del self._plans[layer]
+        self.stats.device_invalidations += len(doomed)
+        return len(doomed)
 
     def clear(self) -> None:
         self._plans.clear()

@@ -87,6 +87,31 @@ def uniform_route_weight(replica_of, n_replicas):
     return jnp.where(live, 1.0 / n_live.astype(jnp.float32), 0.0)
 
 
+def mask_dead_route_weights(route_weight, replica_of, s_pack, dead_devices,
+                            xp=jnp):
+    """Zero the route-weight columns of replicas hosted on dead devices and
+    renormalize each row over the survivors — the zero-migration degradation
+    path: in-flight decodes re-route around a failed device with no plan
+    rebuild and no slot-state loss, because the weighted split drops
+    zero-weight bins entirely (``weighted_route`` keeps only positions below
+    the cumulative row total).
+
+    Rows whose every replica is dead come back all-zero; callers must
+    emergency-replan those experts (``MoEServer.fail_devices`` does).
+    Accepts flat [E, R] or stacked [L, E, R] tables.
+    """
+    dead = sorted(int(d) for d in dead_devices)
+    if not dead:
+        return route_weight
+    dev = xp.where(replica_of >= 0, replica_of // s_pack, -1)
+    doomed = xp.zeros(dev.shape, bool)
+    for d in dead:
+        doomed = doomed | (dev == d)
+    w = xp.where(doomed, 0.0, route_weight.astype(xp.float32))
+    tot = xp.sum(w, axis=-1, keepdims=True)
+    return xp.where(tot > 0, w / xp.maximum(tot, 1e-9), 0.0)
+
+
 def stack_plan_arrays(plans) -> PlanArrays:
     """Stack per-layer plans (PlacementPlan or PlanArrays) into one stacked
     PlanArrays with a leading layer dim.  All plans must agree on device
@@ -160,6 +185,11 @@ def integer_route_weights(counts, route_weight, n_replicas, slot_cap,
         < xp.clip(n_replicas, 1, r_w).astype(xp.int32)[:, None]
     frac = xp.where(live, route_weight.astype(xp.float32), 0.0)
     tot = xp.sum(frac, axis=1, keepdims=True)
+    # a column whose fraction is exactly 0 was deliberately zeroed (dead
+    # device) and must get no remainder/spill tokens; a fully-zeroed row
+    # keeps its replicas so the uniform fallback never drops tokens here —
+    # the server emergency-replans such experts off the dead devices.
+    live = live & ((frac > 0.0) | (tot <= 1e-9))
     n_live = xp.maximum(xp.sum(live.astype(xp.int32), axis=1, keepdims=True),
                         1)
     uniform = xp.where(live, 1.0 / n_live.astype(xp.float32), 0.0)
@@ -210,7 +240,10 @@ def balanced_route_fractions(counts, route_weight, replica_of, n_replicas,
         & (replica_of >= 0)
     dev = xp.where(live, replica_of // s_pack, 0)
     # seed: plan fractions floored away from 0 so the multiplicative update
-    # can recover a column the prior starved; dead/pad columns stay 0
+    # can recover a column the prior starved.  A column whose weight is
+    # *exactly* 0 was deliberately zeroed (dead device / pad — IPF and the
+    # uniform split never emit exact zeros on live columns) and must stay 0.
+    live = live & (route_weight > 0)
     w = xp.where(live, xp.maximum(route_weight.astype(xp.float32), 1e-6), 0.0)
     tot = xp.sum(w, axis=1, keepdims=True)
     w = xp.where(tot > 0, w / xp.maximum(tot, 1e-9), 0.0)

@@ -1,0 +1,16 @@
+"""Seeded fault injection + graceful-degradation glue (PR 9).
+
+``faults`` builds deterministic fault schedules and drives them into the
+serving stack (``ServingEngine`` / ``AdaptiveScheduler`` / ``MoEServer``);
+the degradation paths themselves live where they act — device-masked
+planning in ``core.placement`` / ``core.serving``, the phase-2 watchdog and
+emergency replanning in ``runtime.server``, admission control in
+``runtime.engine``, exception isolation in ``sched``, the non-finite guard
+in ``runtime.trainer``, checksummed checkpoints in ``checkpoint.manager``.
+"""
+from repro.resilience.faults import (FAULT_KINDS, Fault, FaultInjector,
+                                     FaultSchedule, chaos_schedule,
+                                     overload_burst, single_device_failure)
+
+__all__ = ["FAULT_KINDS", "Fault", "FaultInjector", "FaultSchedule",
+           "chaos_schedule", "overload_burst", "single_device_failure"]

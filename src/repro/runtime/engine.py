@@ -53,6 +53,23 @@ class EngineConfig:
     pad_to_pow2: bool = True       # bucket batch rows to powers of two
     state_cache: int = 4096        # completed path states kept for follow-ups
     stats_window: int = 4096       # LayerStats retained for metrics
+    # admission control (repro.resilience): overload degrades to explicit
+    # rejections / deadline sheds instead of unbounded queueing latency
+    max_queue: int = 0             # queue-depth cap; submit returns -1 when
+    #                                full (0 = unbounded, legacy behavior)
+    deadline_s: float = 0.0        # shed queued (never mid-decode) requests
+    #                                older than this at step start (0 = off)
+
+
+@dataclass(frozen=True)
+class ShedRecord:
+    """One explicitly refused request — the accounting that distinguishes
+    load shedding from silent loss (chaos suite invariant: every offered
+    request is completed or lands here)."""
+    rid: int                       # -1: rejected before an id was assigned
+    arrival: float
+    time: float                    # when the engine gave up on it
+    reason: str                    # "deadline" | "rejected"
 
 
 @dataclass
@@ -132,7 +149,8 @@ class ServingEngine:
     def __init__(self, server: MoEServer, ecfg: Optional[EngineConfig] = None,
                  clock: Callable[[], float] = time.perf_counter,
                  scheduler=None,
-                 service_model: Optional[Callable] = None):
+                 service_model: Optional[Callable] = None,
+                 fault_injector=None):
         """``scheduler`` is an ``repro.sched.AdaptiveScheduler``: after each
         micro-batch the engine feeds it the step's LayerStats and served
         token count, and controller-published plans take effect from the
@@ -143,12 +161,23 @@ class ServingEngine:
         wall time in virtual-clock replay (``step(now=...)``): the paper's
         methodology, where per-device load imbalance — invisible to
         single-host wall time — slows the step via its straggler link (see
-        ``benchmarks.inference_model``).  Ignored in wall-clock mode."""
+        ``benchmarks.inference_model``).  Ignored in wall-clock mode.
+
+        ``fault_injector`` is a ``repro.resilience.FaultInjector``: called
+        at each step start (fault firing) and between the step's stats and
+        the scheduler (telemetry corruption)."""
         self.server = server
         self.ecfg = ecfg or EngineConfig()
         self.clock = clock
         self.scheduler = scheduler
         self.service_model = service_model
+        self.fault_injector = fault_injector
+        if fault_injector is not None:
+            fault_injector.attach(self)
+        self.step_idx = 0
+        self.n_submitted = 0
+        self.n_rejected = 0
+        self.shed_records: List[ShedRecord] = []
         self._step_stats: List[LayerStats] = []
         self._queue: Deque[Request] = deque()
         self._active: "OrderedDict[int, DecodeSlot]" = OrderedDict()
@@ -172,16 +201,45 @@ class ServingEngine:
         earlier request of the same stream: the new request seeds its
         rolling path-ID state from that request's final state.
         ``max_new_tokens > 0`` turns the request into a generation request
-        that decodes incrementally through the KV cache after prefill."""
+        that decodes incrementally through the KV cache after prefill.
+
+        With ``EngineConfig.max_queue`` set, a full queue REJECTS the
+        request: returns -1 (no id is consumed) and counts it in
+        ``n_rejected`` — explicit backpressure the caller can retry on
+        (see ``simulate``'s retry-with-backoff client)."""
+        if self.ecfg.max_queue and len(self._queue) >= self.ecfg.max_queue:
+            self.n_rejected += 1
+            return -1
         tokens = np.asarray(tokens).reshape(-1)
         rid = self._next_rid
         self._next_rid += 1
+        self.n_submitted += 1
         state = None if prev_rid is None else self.request_path_state(prev_rid)
         req = Request(rid, tokens,
                       self.clock() if arrival is None else arrival,
                       path_state=state, max_new_tokens=int(max_new_tokens))
         self._queue.append(req)
         return rid
+
+    def record_shed(self, rid: int, arrival: float, time: float,
+                    reason: str) -> None:
+        self.shed_records.append(ShedRecord(rid, arrival, time, reason))
+
+    def _shed_expired(self, now: float) -> None:
+        """Deadline-based load shedding: drop QUEUED requests whose wait
+        already exceeds ``deadline_s`` (mid-decode requests are never shed
+        — their slot state is paid for).  Every drop is recorded, never
+        silent."""
+        dl = self.ecfg.deadline_s
+        if not dl:
+            return
+        kept: Deque[Request] = deque()
+        for req in self._queue:
+            if now - req.arrival > dl:
+                self.record_shed(req.rid, req.arrival, now, "deadline")
+            else:
+                kept.append(req)
+        self._queue = kept
 
     def pending(self) -> int:
         return len(self._queue)
@@ -259,6 +317,14 @@ class ServingEngine:
         completions are stamped ``now + wall_service * time_scale``
         (virtual-clock replay); otherwise from the engine clock."""
         ecfg = self.ecfg
+        self.step_idx += 1
+        t_now = self.clock() if now is None else now
+        if self.fault_injector is not None:
+            # faults fire before batch formation: an overload burst's
+            # requests are admissible this step, a device failure degrades
+            # this step's routing
+            self.fault_injector.on_step(self, t_now)
+        self._shed_expired(t_now)
         decodes = list(self._active.values())[:ecfg.max_batch_requests]
         decodes = decodes[:ecfg.max_batch_tokens]
         prefills = self._form_microbatch(
@@ -289,8 +355,13 @@ class ServingEngine:
             out.extend(self._finish_prefills(group, res, completion))
         if self.scheduler is not None:
             # between micro-batches: feed telemetry, maybe publish plans —
-            # they apply from the NEXT step, never mid-batch
-            self.scheduler.after_step(self._step_stats, n_tokens)
+            # they apply from the NEXT step, never mid-batch.  The injector
+            # corrupts the observed stats here (telemetry faults poison the
+            # control loop's view, not the actual serving math).
+            stats = self._step_stats
+            if self.fault_injector is not None:
+                stats = self.fault_injector.filter_stats(stats)
+            self.scheduler.after_step(stats, n_tokens)
         return out
 
     # --- decode phase -------------------------------------------------------
@@ -480,10 +551,13 @@ class ServingEngine:
             if self._layers_served else 0.0
 
 
-def summarize_results(results: List[RequestResult]) -> dict:
+def summarize_results(results: List[RequestResult],
+                      engine: Optional[ServingEngine] = None) -> dict:
     """Latency / TTFT / time-per-output-token percentiles (seconds) and
     decode throughput over a completed result set — the one summarization
-    shared by the serve driver, the example, and the traffic benchmark."""
+    shared by the serve driver, the example, and the traffic benchmark.
+    Pass ``engine`` to also surface its admission-control ledger (shed /
+    rejected counts)."""
     lat = np.array([r.latency for r in results])
     ttft = np.array([r.ttft_latency for r in results
                      if r.ttft_latency is not None])
@@ -492,7 +566,7 @@ def summarize_results(results: List[RequestResult]) -> dict:
     span = (max(r.completion for r in results) -
             min(r.arrival for r in results)) if results else 0.0
     pct = lambda a, q: float(np.percentile(a, q)) if a.size else float("nan")
-    return {
+    out = {
         "n": len(results),
         "latency_p50": pct(lat, 50), "latency_p95": pct(lat, 95),
         "ttft_p50": pct(ttft, 50), "ttft_p95": pct(ttft, 95),
@@ -500,10 +574,19 @@ def summarize_results(results: List[RequestResult]) -> dict:
         "gen_tokens": n_gen,
         "gen_tok_s": n_gen / span if span > 0 else 0.0,
     }
+    if engine is not None:
+        shed = engine.shed_records
+        out["shed_deadline"] = sum(s.reason == "deadline" for s in shed)
+        out["shed_rejected"] = sum(s.reason == "rejected" for s in shed)
+        out["rejected_submits"] = engine.n_rejected
+        out["submitted"] = engine.n_submitted
+    return out
 
 
 def simulate(engine: ServingEngine, requests, time_scale: float = 1.0,
-             max_new_tokens: int = 0) -> List[RequestResult]:
+             max_new_tokens: int = 0, retry_backoff_s: float = 0.0,
+             max_retries: int = 3,
+             on_step: Optional[Callable] = None) -> List[RequestResult]:
     """Open-loop trace replay: ``requests`` is an iterable of
     (tokens, arrival_time) virtual-time pairs.  Queueing delay comes from
     the virtual clock; service time is the measured wall time of each step
@@ -511,21 +594,44 @@ def simulate(engine: ServingEngine, requests, time_scale: float = 1.0,
     generates that many tokens through the incremental-decode path, and a
     request's latency spans prefill + all its decode steps.  Returns
     per-request results whose ``latency`` mixes both — the standard
-    open-loop p50/p95 methodology."""
-    trace = [(np.asarray(tok).reshape(-1), float(at)) for tok, at in requests]
+    open-loop p50/p95 methodology.
+
+    With ``retry_backoff_s`` set the client half of admission control
+    engages: a rejected submit (queue full, -1) is re-attempted at
+    ``arrival + backoff * 2^attempt`` up to ``max_retries`` times, after
+    which the give-up is recorded on the engine's shed ledger — offered
+    traffic is always accounted completed, shed, or rejected, never lost.
+    ``on_step(engine, vclock, done)`` is called after every engine step
+    (chaos-benchmark probe for per-step recovery tracking)."""
+    trace = [(np.asarray(tok).reshape(-1), float(at), 0)
+             for tok, at in requests]
     trace.sort(key=lambda p: p[1])
+    pending = deque(trace)
     vclock = 0.0
-    i = 0
     results: List[RequestResult] = []
-    while i < len(trace) or engine.has_work():
-        if not engine.has_work():
-            vclock = max(vclock, trace[i][1])       # idle until next arrival
-        while i < len(trace) and trace[i][1] <= vclock:
-            engine.submit(trace[i][0], arrival=trace[i][1],
-                          max_new_tokens=max_new_tokens)
-            i += 1
+    while pending or engine.has_work():
+        if pending and not engine.has_work():
+            vclock = max(vclock, pending[0][1])     # idle until next arrival
+        retries = []
+        while pending and pending[0][1] <= vclock:
+            tok, at, attempt = pending.popleft()
+            rid = engine.submit(tok, arrival=at, max_new_tokens=max_new_tokens)
+            if rid >= 0:
+                continue
+            if retry_backoff_s > 0 and attempt < max_retries:
+                retries.append((tok, at + retry_backoff_s * 2 ** attempt,
+                                attempt + 1))
+            else:
+                engine.record_shed(-1, at, vclock, "rejected")
+        if retries:
+            pending.extend(retries)
+            pending = deque(sorted(pending, key=lambda p: p[1]))
         done = engine.step(now=vclock, time_scale=time_scale)
         if engine.last_step_end is not None:
             vclock = max(vclock, engine.last_step_end)  # one stamp per batch
+        elif pending:
+            vclock = max(vclock, pending[0][1])     # nothing ran: skip ahead
         results.extend(done)
+        if on_step is not None:
+            on_step(engine, vclock, done)
     return results

@@ -37,6 +37,7 @@ path + KV state).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from functools import partial
 from typing import List, NamedTuple, Optional
@@ -48,10 +49,11 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.gating import capacity
 from repro.core.placement import (PlacementPlan, PlanCache, identity_plan,
-                                  needs_finetune, plan_placement,
-                                  route_weights)
+                                  needs_finetune, plan_from_replicas,
+                                  plan_placement, route_weights)
 from repro.core.popularity import PathProfile
 from repro.core.serving import (PlanArrays, dp_shard_count,
+                                mask_dead_route_weights,
                                 replica_token_counts, serve_moe_layer,
                                 slot_capacity)
 from repro.models import lm as lm_mod
@@ -72,6 +74,10 @@ class ServerConfig:
     plan_cache: bool = True        # reuse plans across batches until drift
     route_mode: str = "weighted"   # weighted (§5 histogram split) |
     #                                round_robin (positional ablation)
+    phase2_timeout_s: float = 0.0  # watchdog: a phase-2 re-plan slower than
+    #                                this suppresses further fine-tunes for
+    #                                ``phase2_backoff`` plan calls (0 = off)
+    phase2_backoff: int = 8
 
 
 @dataclass
@@ -145,6 +151,15 @@ class MoEServer:
         # cadence instead of per micro-batch
         self._plan_override: dict = {}
         self._override_fresh: set = set()
+        # --- resilience state (repro.resilience) ---
+        # devices masked out of planning and routing; fault_hook, when set,
+        # is called as fault_hook("plan", layer) before each primary plan
+        # build (the injection point for planner-crash faults)
+        self.dead_devices: set = set()
+        self.fault_hook = None
+        self.degrade_stats: dict = {"planner_errors": 0, "phase2_timeouts": 0,
+                                    "emergency_replans": 0}
+        self._phase2_suppress = 0
 
     # --- adaptive scheduling (repro.sched) ---------------------------------
     def publish_plans(self, plans: dict) -> None:
@@ -156,6 +171,60 @@ class MoEServer:
         ``test_engine_plan_swap_mid_decode_is_transparent``)."""
         self._plan_override.update(plans)
         self._override_fresh.update(plans.keys())
+
+    # --- graceful degradation (repro.resilience) ---------------------------
+    def fail_devices(self, devices) -> None:
+        """Mask failed devices out of routing and planning, without touching
+        in-flight decode state.
+
+        Three rungs, cheapest first: (1) every served plan's route weights
+        get their dead-replica columns zeroed (``_plan_device`` re-applies
+        ``mask_dead_route_weights`` on upload — zero-migration, the kernel
+        simply stops sending tokens there); (2) cached plans that placed an
+        expert on a dead device are invalidated so the next batch re-plans
+        under the mask; (3) a controller-published override plan that left
+        some expert with NO surviving replica is emergency-rebuilt in place
+        (incremental ``plan_from_replicas`` keeps surviving replicas where
+        they are)."""
+        devs = {int(d) for d in devices if 0 <= d < self.n_dev}
+        if not devs - self.dead_devices:
+            return
+        self.dead_devices |= devs
+        self._plan_arrays.clear()      # route-weight mask must re-apply
+        if self.plan_cache is not None:
+            self.plan_cache.invalidate_devices(self.dead_devices)
+        rebuilt = {}
+        for li, plan in self._plan_override.items():
+            if self._plan_orphaned(plan):
+                rebuilt[li] = plan_from_replicas(
+                    plan.popularity, plan.n_replicas, self.n_dev,
+                    max_pack=self.scfg.max_pack,
+                    rep_width=plan.replica_of.shape[1], prev=plan,
+                    dead_devices=self.dead_devices)
+        if rebuilt:
+            self.degrade_stats["emergency_replans"] += len(rebuilt)
+            self.publish_plans(rebuilt)
+
+    def revive_devices(self, devices) -> None:
+        """Return repaired devices to the pool; plans re-expand onto them at
+        the next re-plan (cache drift / controller cadence)."""
+        self.dead_devices -= {int(d) for d in devices}
+        self._plan_arrays.clear()
+
+    def _plan_orphaned(self, plan: PlacementPlan) -> bool:
+        """True iff some expert's every live replica sits on a dead device
+        (zero-weight masking alone would drop its tokens)."""
+        if not self.dead_devices:
+            return False
+        ro = np.asarray(plan.replica_of)
+        live = (np.arange(ro.shape[1])[None, :]
+                < np.clip(plan.n_replicas, 1, ro.shape[1])[:, None]) \
+            & (ro >= 0)
+        on_dead = np.zeros(ro.shape, bool)
+        dev = np.where(live, ro // plan.max_pack, -1)
+        for d in self.dead_devices:
+            on_dead |= dev == d
+        return bool((live & ~on_dead).sum(1).min() == 0)
 
     def warmup(self, *, seqs=(), rows=(1,), min_replicas_grid=(1, 2),
                max_new_tokens: int = 8) -> int:
@@ -318,10 +387,15 @@ class MoEServer:
 
         # the popularity basis the final plan must honor: the estimate in
         # the common case, the realized popularity when phase 2 triggers
-        # (or when estimation is ablated away entirely)
+        # (or when estimation is ablated away entirely).  The watchdog's
+        # backoff window suppresses the blocking phase-2 re-plan and serves
+        # from the phase-1 estimate instead.
+        suppressed = self._phase2_suppress > 0
+        if suppressed:
+            self._phase2_suppress -= 1
         if not scfg.use_estimation:
             basis, phase2 = actual, False
-        elif scfg.use_finetuning and not accurate:
+        elif scfg.use_finetuning and not accurate and not suppressed:
             basis, phase2 = actual, True
         else:
             basis, phase2 = est, False
@@ -333,10 +407,44 @@ class MoEServer:
         # paper's ~23% fine-tune cost) only happens when the basis drifted
         finetuned = phase2 and not reused
         if plan is None:
-            plan = plan_placement(basis, self.n_dev, scfg.max_pack)
+            plan = self._build_plan(li, basis, est, phase2)
             if self.plan_cache is not None:
                 self.plan_cache.store(li, plan)
         return plan, finetuned, accurate, reused
+
+    def _build_plan(self, li: int, basis: np.ndarray, est: np.ndarray,
+                    phase2: bool) -> PlacementPlan:
+        """Plan build wrapped in the phase-2 watchdog: a planner exception
+        falls back down a degradation ladder (phase-1 estimate, then the
+        masked uniform layout) instead of failing the batch, and a phase-2
+        build slower than ``phase2_timeout_s`` suppresses further
+        fine-tunes for ``phase2_backoff`` plan calls.  Either event arms
+        the backoff and bumps ``degrade_stats``."""
+        scfg = self.scfg
+        t0 = time.perf_counter()
+        try:
+            if self.fault_hook is not None:
+                self.fault_hook("plan", li)
+            plan = plan_placement(basis, self.n_dev, scfg.max_pack,
+                                  dead_devices=self.dead_devices)
+        except Exception:
+            self.degrade_stats["planner_errors"] += 1
+            self._phase2_suppress = max(self._phase2_suppress,
+                                        scfg.phase2_backoff)
+            try:
+                return plan_placement(est, self.n_dev, scfg.max_pack,
+                                      dead_devices=self.dead_devices)
+            except Exception:
+                e = self.cfg.moe.n_experts
+                return plan_from_replicas(
+                    np.full((e,), 1.0 / e), np.ones((e,), np.int64),
+                    self.n_dev, max_pack=scfg.max_pack,
+                    dead_devices=self.dead_devices)
+        if phase2 and scfg.phase2_timeout_s > 0 and \
+                time.perf_counter() - t0 > scfg.phase2_timeout_s:
+            self.degrade_stats["phase2_timeouts"] += 1
+            self._phase2_suppress = scfg.phase2_backoff
+        return plan
 
     # --- the shared per-layer two-phase core -------------------------------
     def _serve_moe(self, li: int, gp, h2, valid: np.ndarray,
@@ -408,6 +516,13 @@ class MoEServer:
             if len(self._plan_arrays) > 256:
                 self._plan_arrays.clear()
             host_rw = route_weights(plan)
+            if self.dead_devices:
+                # degradation rung 1: zero-migration re-route — dead-replica
+                # columns drop to weight 0 so the weighted split sends them
+                # nothing (``fail_devices`` cleared this cache to re-apply)
+                host_rw = np.asarray(mask_dead_route_weights(
+                    host_rw, plan.replica_of, plan.max_pack,
+                    self.dead_devices, xp=np), np.float32)
             ent = (plan, jnp.asarray(plan.slot_expert),
                    jnp.asarray(plan.replica_of), jnp.asarray(plan.n_replicas),
                    jnp.asarray(host_rw),

@@ -9,6 +9,10 @@ Production behaviors exercised here (and in tests):
   * straggler watchdog: per-step wall time is tracked against a rolling
     median; outliers are logged (on a real cluster this feeds the
     reallocation logic; here it is observable behavior under test);
+  * non-finite guard (repro.resilience): a step whose loss/metrics come
+    back NaN/inf is SKIPPED — params/opt state keep their pre-step values —
+    and ``max_bad_steps`` consecutive bad steps trigger a rollback to the
+    newest verified checkpoint; step-indexed data keeps the replay exact;
   * expert packing controller (paper §6.1): after ``pack_warmup`` steps the
     Trainer re-evaluates experts-per-device from measured FFN vs a2a
     micro-op times (the analytic v5e model stands in for CUDA events).
@@ -67,6 +71,11 @@ class TrainerConfig:
     straggler_factor: float = 3.0
     pack_warmup: int = 10                    # paper: packing decided at step 10
     seed: int = 0
+    # non-finite guard: skip steps with NaN/inf metrics; roll back to the
+    # newest checkpoint after this many CONSECUTIVE bad steps (0 = guard off)
+    max_bad_steps: int = 3
+    nan_at_steps: tuple = ()                 # fault injection: force these
+    #                                          steps' metrics non-finite
 
 
 class Trainer:
@@ -96,6 +105,8 @@ class Trainer:
         self.metrics_log: list = []
         self.straggler_events: list = []
         self.packing_decision = None
+        self.skipped_steps: list = []        # non-finite guard: steps skipped
+        self.rollbacks = 0                   # checkpoint rollbacks performed
 
     def init_state(self):
         params = lm_mod.init_params(self.model_cfg,
@@ -121,6 +132,7 @@ class Trainer:
             start_step = 0
 
         times: list = []
+        consec_bad = 0
         for step in range(start_step, self.cfg.steps):
             if self.cfg.fail_at_step is not None and step == self.cfg.fail_at_step:
                 raise RuntimeError(f"injected failure at step {step}")
@@ -135,7 +147,24 @@ class Trainer:
                 params, opt_state, m = self.step_fn(state["params"],
                                                     state["opt_state"], batch)
             m = {k: float(v) for k, v in m.items()}
+            if step in (self.cfg.nan_at_steps or ()):
+                m = dict(m, loss=float("nan"))       # injected divergence
             dt = time.perf_counter() - t0
+            # --- non-finite guard: a diverged step must not commit ---------
+            if self.cfg.max_bad_steps and \
+                    not all(np.isfinite(v) for v in m.values()):
+                self.skipped_steps.append(step)
+                self.metrics_log.append({"step": step, **m, "dt": dt,
+                                         "skipped": True})
+                consec_bad += 1
+                if consec_bad >= self.cfg.max_bad_steps:
+                    _, rb_state = self.ckpt.restore_latest(state)
+                    if rb_state is not None:
+                        state = rb_state
+                        self.rollbacks += 1
+                    consec_bad = 0
+                continue         # params/opt_state keep pre-step values
+            consec_bad = 0
             state = {"params": params, "opt_state": opt_state}
             if self.stateful_reduce:
                 state["reduce_state"] = rstate

@@ -126,6 +126,7 @@ class AutoscaleController:
         self.n_devices = n_devices
         self.max_pack = max_pack
         self.cfg = cfg or ControllerConfig()
+        self.dead_devices: set = set()   # masked out of every candidate
         self.plans: Dict[int, PlacementPlan] = {}     # live published plans
         self._last_swap: Dict[int, int] = {}
         self.evaluations = 0
@@ -146,17 +147,19 @@ class AutoscaleController:
     # --- candidate construction --------------------------------------------
     def candidate(self, popularity: np.ndarray, drift_rate: float,
                   prev: Optional[PlacementPlan] = None) -> PlacementPlan:
-        r = replica_targets(popularity, self.n_devices, drift_rate,
+        live = self.n_devices - len(self.dead_devices)
+        r = replica_targets(popularity, live, drift_rate,
                             headroom=self.cfg.headroom,
                             fill=self.cfg.fill,
                             floor=self.cfg.replica_floor,
                             max_replicas=self.cfg.max_replicas,
-                            budget=self.n_devices * self.max_pack)
+                            budget=live * self.max_pack)
         if prev is not None and self.cfg.max_moves:
             r = self._throttle(r, prev, popularity)
         return plan_from_replicas(popularity, r, self.n_devices,
                                   max_pack=self.max_pack,
-                                  rep_width=self.n_devices, prev=prev)
+                                  rep_width=self.n_devices, prev=prev,
+                                  dead_devices=self.dead_devices)
 
     def _throttle(self, target: np.ndarray, prev: PlacementPlan,
                   pop: np.ndarray) -> np.ndarray:
@@ -176,7 +179,7 @@ class AutoscaleController:
             grant = int(min(deficit[ex], adds))
             cur[ex] += grant
             adds -= grant
-        budget = self.n_devices * self.max_pack
+        budget = (self.n_devices - len(self.dead_devices)) * self.max_pack
         while cur.sum() > budget:
             over = cur - target
             mx = over.max()
@@ -271,17 +274,48 @@ class AdaptiveScheduler:
         self.step_idx = 0
 
     def after_step(self, stats: List, n_tokens: int) -> bool:
-        """Returns True when a plan swap was published this step."""
+        """Returns True when a plan swap was published this step.
+
+        The control step is exception-isolated (always-on degradation): a
+        crashing controller leaves the last published plans serving and
+        lands on the bus's error ledger instead of taking the serving loop
+        down with it."""
         self.step_idx += 1
         self.bus.observe_step(stats, n_tokens)
         cache = getattr(self.server, "plan_cache", None)
         if cache is not None:
             self.bus.observe_cache(cache.stats)
-        plans = self.controller.step(self.bus, self.step_idx)
+        try:
+            plans = self.controller.step(self.bus, self.step_idx)
+        except Exception:
+            self.bus.record_error("controller_step")
+            plans = None
         if plans:
             self.server.publish_plans(plans)
             return True
         return False
+
+    # --- graceful degradation (repro.resilience) ---------------------------
+    def fail_devices(self, devices) -> None:
+        """Propagate a device failure through the whole control loop: the
+        controller masks the devices out of every future candidate, its
+        live plans touching them are dropped (an unplanned layer triggers
+        an immediate re-bootstrap at the next step, bypassing the interval
+        and swap-gap gating), and the server re-routes around them now."""
+        devs = {int(d) for d in devices}
+        self.controller.dead_devices |= devs
+        for li, plan in list(self.controller.plans.items()):
+            dead_slots = plan.slot_expert[sorted(
+                d for d in devs if d < plan.n_devices)]
+            if (np.asarray(dead_slots) >= 0).any():
+                del self.controller.plans[li]
+                self.controller._last_swap.pop(li, None)
+        self.server.fail_devices(devs)
+
+    def revive_devices(self, devices) -> None:
+        devs = {int(d) for d in devices}
+        self.controller.dead_devices -= devs
+        self.server.revive_devices(devs)
 
     @property
     def churn_per_100_steps(self) -> float:

@@ -87,6 +87,22 @@ class TelemetryBus:
         self._cache_last = (0, 0, 0)      # (hits, misses, invalidations)
         self.cache_rates = {"hit": 0.0, "miss": 0.0, "invalidation": 0.0}
         self.steps = 0
+        # error ledger (repro.resilience): rejected-telemetry and isolated
+        # control-loop failures land here instead of crashing the loop
+        self.errors: Dict[str, int] = {}
+
+    def record_error(self, kind: str) -> None:
+        """Count a named control-plane error (e.g. ``controller_step``,
+        ``telemetry_rejected``) — the observability half of exception
+        isolation: degraded, but never silent."""
+        self.errors[kind] = self.errors.get(kind, 0) + 1
+
+    @staticmethod
+    def _valid_obs(pop: np.ndarray, load: np.ndarray) -> bool:
+        """A corrupted snapshot (NaN/inf/negative histogram or device load)
+        must not poison the EWMAs the controller plans from."""
+        return bool(np.isfinite(pop).all() and (pop >= 0).all()
+                    and np.isfinite(load).all() and (load >= 0).all())
 
     # --- feeding ------------------------------------------------------------
     def observe_step(self, stats: List, n_tokens: int) -> None:
@@ -100,6 +116,10 @@ class TelemetryBus:
                 lt = self._layers[s.layer] = LayerTelemetry(
                     n_experts=int(np.asarray(s.actual_pop).shape[0]))
             pop = np.asarray(s.actual_pop, np.float64)
+            load = np.asarray(s.device_load, np.float64)
+            if not self._valid_obs(pop, load):
+                self.record_error("telemetry_rejected")
+                continue
             tot = pop.sum()
             if tot <= 0:          # all-padding micro-batch: nothing observed
                 continue
@@ -199,6 +219,7 @@ class TelemetryBus:
         return {
             "steps": self.steps,
             "cache_rates": dict(self.cache_rates),
+            "errors": dict(self.errors),
             "layers": {
                 li: {
                     "drift_rate": lt.drift_rate,

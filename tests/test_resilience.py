@@ -1,0 +1,225 @@
+"""Fault-injection harness + graceful degradation (repro.resilience).
+
+Covers the PR-9 contract end to end: seeded fault schedules are
+deterministic (same seed -> bitwise-identical chaos replay), admission
+control accounts every offered request (completed / shed / rejected —
+never silently dropped), corrupted telemetry is rejected by the bus,
+injected planner crashes fall back instead of failing the batch, the
+trainer's non-finite guard skips and rolls back, and a corrupted
+checkpoint falls back to the newest verified step."""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.popularity import PathProfile
+from repro.models import lm as lm_mod
+from repro.resilience import (FAULT_KINDS, Fault, FaultInjector,
+                              FaultSchedule, chaos_schedule, overload_burst,
+                              single_device_failure)
+from repro.runtime.engine import (EngineConfig, ServingEngine, simulate,
+                                  summarize_results)
+from repro.runtime.server import MoEServer, ServerConfig
+from repro.sched.telemetry import TelemetryBus
+
+
+# --- schedules --------------------------------------------------------------
+
+def test_chaos_schedule_is_deterministic():
+    a = chaos_schedule(seed=11, n_steps=50, n_devices=8, n_layers=4)
+    b = chaos_schedule(seed=11, n_steps=50, n_devices=8, n_layers=4)
+    assert a == b and a.faults == b.faults
+    c = chaos_schedule(seed=12, n_steps=50, n_devices=8, n_layers=4)
+    assert a != c
+    assert all(f.kind in FAULT_KINDS for f in a.faults)
+
+
+def test_fault_activity_windows():
+    f = Fault("straggler", step=5, duration=3, device=2)
+    sched = FaultSchedule([f])
+    assert not f.active_at(4)
+    assert f.active_at(5) and f.active_at(7)
+    assert not f.active_at(8)
+    assert sched.starting(5) == [f]
+    assert sched.ending(8) == [f]           # last active step was 7
+    assert sched.active(6, "straggler") == [f]
+    assert sched.active(6, "telemetry") == []
+    # permanent faults never end
+    perm = single_device_failure(3, device=1).faults[0]
+    assert perm.active_at(10 ** 6) and perm.duration < 0
+
+
+# --- end-to-end chaos determinism -------------------------------------------
+
+def _smoke_server():
+    cfg = get_config("gpt2-moe").smoke()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    params = lm_mod.init_params(cfg, jax.random.PRNGKey(0))
+    prof = PathProfile(n_layers=cfg.n_moe_layers,
+                       n_experts=cfg.moe.n_experts, path_len=2)
+    return cfg, MoEServer(cfg, params, prof,
+                          ServerConfig(path_len=2, schedule_policy="lina"))
+
+
+def _chaos_run(cfg, server, schedule):
+    inj = FaultInjector(schedule, resilience=True, rng_seed=5,
+                        vocab_size=cfg.vocab_size, burst_seq_len=8)
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=64,
+                                             max_queue=4, deadline_s=0.5),
+                        fault_injector=inj)
+    rng = np.random.RandomState(9)
+    trace = [(rng.randint(0, cfg.vocab_size, (10,)), 0.02 * i)
+             for i in range(6)]
+    results = simulate(eng, trace, time_scale=0.0, max_new_tokens=4,
+                       retry_backoff_s=0.01)
+    return eng, inj, results
+
+
+def test_seeded_fault_schedule_replays_bitwise():
+    """The same seeded schedule against the same engine must reproduce the
+    run exactly: tokens, shed ledger, fired events, penalty log."""
+    schedule = FaultSchedule([
+        Fault("device_failure", 2, duration=-1, device=1),
+        Fault("overload", 3, n_requests=8),
+        Fault("telemetry", 4, duration=2),
+        Fault("planner_crash", 5, duration=1),
+    ])
+    runs = []
+    for _ in range(2):
+        cfg, server = _smoke_server()
+        runs.append(_chaos_run(cfg, server, schedule))
+    (eng_a, inj_a, res_a), (eng_b, inj_b, res_b) = runs
+    toks_a = {r.rid: (None if r.tokens is None else r.tokens.tolist())
+              for r in res_a}
+    toks_b = {r.rid: (None if r.tokens is None else r.tokens.tolist())
+              for r in res_b}
+    assert toks_a == toks_b
+    assert eng_a.shed_records == eng_b.shed_records
+    assert inj_a.report() == inj_b.report()
+    assert inj_a.penalty_log == inj_b.penalty_log
+    # the schedule actually fired everything it promised
+    assert inj_a.events == {"device_failure": 1, "overload": 1,
+                            "telemetry": 1, "planner_crash": 1}
+    assert eng_a.server.dead_devices == {1}
+
+
+def test_admission_control_accounts_every_request():
+    """Offered == completed + shed, with explicit reject/deadline records —
+    the chaos suite's zero-silent-drop invariant at the engine level."""
+    schedule = overload_burst(2, n_requests=12)
+    cfg, server = _smoke_server()
+    eng, inj, results = _chaos_run(cfg, server, schedule)
+    m = summarize_results(results, engine=eng)
+    offered = 6 + inj.injected
+    shed = m["shed_deadline"] + m["shed_rejected"]
+    assert inj.injected == 12
+    assert inj.injected_rejected > 0          # the burst overflowed the cap
+    assert offered == len(results) + shed     # nothing silently dropped
+    assert m["submitted"] == len(results) + m["shed_deadline"]
+    # rejected records carry rid -1 (no id was consumed)
+    assert all(s.rid == -1 for s in eng.shed_records
+               if s.reason == "rejected")
+
+
+# --- always-on rungs ---------------------------------------------------------
+
+def test_telemetry_bus_rejects_corrupted_stats():
+    from repro.runtime.server import LayerStats
+
+    def stat(pop):
+        return LayerStats(layer=0, est_pop=pop, actual_pop=pop,
+                          finetuned=False, est_accurate=True,
+                          plan_reused=False,
+                          device_load=np.ones(4) / 4, n_tokens=8)
+
+    bus = TelemetryBus()
+    bus.observe_step([stat(np.array([.4, .3, .2, .1]))], n_tokens=8)
+    bus.observe_step([stat(np.array([np.nan, .3, .2, .1]))], n_tokens=8)
+    bus.observe_step([stat(np.array([-.5, .3, .2, .1]))], n_tokens=8)
+    assert bus.errors == {"telemetry_rejected": 2}
+    assert bus.snapshot()["errors"] == {"telemetry_rejected": 2}
+    # the poisoned steps never reached the estimate
+    est = bus.popularity(0)
+    assert est is not None and np.isfinite(np.asarray(est)).all()
+
+
+def test_planner_crash_falls_back_and_keeps_serving():
+    cfg, server = _smoke_server()
+
+    def hook(what, layer):
+        raise RuntimeError("injected planner crash")
+
+    server.fault_hook = hook
+    toks = np.random.RandomState(0).randint(0, cfg.vocab_size, (2, 16))
+    logits, stats = server.serve(toks)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert len(stats) == cfg.n_moe_layers     # every layer still served
+    assert server.degrade_stats["planner_errors"] > 0
+
+
+# --- trainer non-finite guard ------------------------------------------------
+
+def test_trainer_skips_nan_steps_and_rolls_back(tmp_path):
+    from repro.data import DataConfig
+    from repro.optim.adamw import AdamWConfig
+    from repro.runtime import Trainer, TrainerConfig
+
+    cfg = get_config("gpt2-moe").smoke()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4,
+                      seed=0)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+    tr = Trainer(cfg, dcfg, ocfg, TrainerConfig(
+        steps=10, ckpt_dir=str(tmp_path), ckpt_every=2, pack_warmup=3,
+        max_bad_steps=2, nan_at_steps=(5, 6)))
+    state = tr.run()
+    # both injected steps were skipped, never committed
+    assert tr.skipped_steps == [5, 6]
+    skipped = [m for m in tr.metrics_log if m.get("skipped")]
+    assert [m["step"] for m in skipped] == [5, 6]
+    # two consecutive bad steps hit max_bad_steps -> one rollback
+    assert tr.rollbacks == 1
+    # training continued to completion with finite, committed state
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree.leaves(state))
+    good = [m for m in tr.metrics_log if not m.get("skipped")]
+    assert good[-1]["step"] == 9
+
+
+# --- checkpoint corruption fallback ------------------------------------------
+
+def test_restore_latest_skips_corrupted_checkpoints(tmp_path):
+    from repro.checkpoint import CheckpointManager
+    from repro.checkpoint.manager import CorruptCheckpointError
+
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    state = {"w": np.arange(8, dtype=np.float32)}
+    for step in (1, 2, 3):
+        mgr.save(step, {"w": state["w"] * step})
+    # corrupt the newest checkpoint's arrays in place
+    npz = os.path.join(str(tmp_path), "step_00000003", "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.seek(0)
+        f.write(b"\x00" * 64)
+    with pytest.raises(CorruptCheckpointError):
+        mgr.restore(3, state)
+    step, restored = mgr.restore_latest(state)
+    assert step == 2 and mgr.corrupt_steps == [3]
+    np.testing.assert_array_equal(restored["w"], state["w"] * 2)
+    # checksum mismatch (not just unreadable file) is also caught: flip a
+    # byte inside the manifest's recorded crc -> load must not trust it
+    man = os.path.join(str(tmp_path), "step_00000002", "manifest.json")
+    with open(man) as f:
+        j = json.load(f)
+    j[0]["crc32"] ^= 0xFF
+    with open(man, "w") as f:
+        json.dump(j, f)
+    with pytest.raises(CorruptCheckpointError):
+        mgr.restore(2, state, verify=True)
+    step, restored = mgr.restore_latest(state)
+    assert step == 1
+    np.testing.assert_array_equal(restored["w"], state["w"])

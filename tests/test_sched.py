@@ -122,7 +122,7 @@ def test_plan_from_replicas_budget_shed_and_overflow():
     plan = plan_from_replicas(pop, np.array([8, 8, 8, 8]), n_devices=4,
                               max_pack=2)
     assert plan.n_replicas.sum() == 8          # shed to the slot budget
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         plan_from_replicas(np.ones(16) / 16, np.ones(16), n_devices=2,
                            max_pack=2)
 

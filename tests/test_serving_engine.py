@@ -574,3 +574,41 @@ def test_engine_simulate_open_loop_latency():
     assert all(r.completion >= r.arrival for r in results)
     # steady traffic + cached plans => some reuse after the first batch
     assert eng.plan_reuse_rate > 0.0
+
+
+def test_engine_device_failure_mid_decode_keeps_tokens_bitwise():
+    """A device failing mid-decode must degrade transparently: the dead
+    device's route weights are zeroed (zero-migration re-route), affected
+    cached plans are invalidated and replanned under the device mask, and
+    — because every replica serves the identical expert math and capacity
+    has headroom — every request's generated tokens stay bitwise identical
+    to the fault-free run.  Decode slots are never lost."""
+    cfg, ref_server = _smoke_server(capacity_factor=16.0)
+    rng = np.random.RandomState(47)
+    prompts = [rng.randint(0, cfg.vocab_size, (10,)) for _ in range(3)]
+
+    ref_eng = ServingEngine(ref_server, EngineConfig(max_batch_tokens=64))
+    for p in prompts:
+        ref_eng.submit(p, arrival=0.0, max_new_tokens=6)
+    ref = _tokens_of(ref_eng.run())
+
+    _, server = _smoke_server(capacity_factor=16.0)
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=64))
+    for p in prompts:
+        eng.submit(p, arrival=0.0, max_new_tokens=6)
+    results, failed_mid_decode, post_fail_stats = [], False, []
+    while eng.has_work():
+        results.extend(eng.step(now=0.0))
+        if not server.dead_devices and eng.active():
+            server.fail_devices({1})             # die mid-decode
+            failed_mid_decode = eng.active() > 0
+            n_before = len(eng.layer_stats)
+        if server.dead_devices:
+            post_fail_stats = list(eng.layer_stats)[n_before:]
+    assert failed_mid_decode                     # requests were in flight
+    assert server.dead_devices == {1}
+    assert _tokens_of(results) == ref            # bitwise-identical output
+    # the re-route is real: no realized load lands on the dead device
+    assert post_fail_stats
+    for s in post_fail_stats:
+        assert float(np.asarray(s.device_load)[1]) == 0.0
