@@ -9,6 +9,8 @@ reports.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 
 import jax
@@ -26,11 +28,13 @@ MODEL_TOKENS = 32768
 from repro.core.popularity import PathProfile
 from repro.data import DataConfig, SyntheticLM
 from repro.models import lm as lm_mod
+from repro.obs import ObsContext
 from repro.runtime.engine import (EngineConfig, ServingEngine, simulate,
                                   summarize_results)
 from repro.runtime.server import MoEServer, ServerConfig, profile_from_training
 
 MODELS = {"transformer-xl": TRANSFORMER_XL, "bert-large": BERT_LARGE}
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _skewed_smoke(base, n_experts: int, seed=0, skew=2.0):
@@ -183,8 +187,17 @@ def poisson_zipf_trace(cfg, n_requests: int, seq: int, rate_hz: float,
     return trace
 
 
+def _hist_ms(met, name: str, q: float, **labels) -> float:
+    """Registry histogram quantile in ms (NaN when absent/empty)."""
+    h = met.get(name, **labels)
+    if h is None or not h.count:
+        return float("nan")
+    return h.quantile(q) * 1e3
+
+
 def traffic_skewed_bursty(n_requests=24, seq=48, rate_hz=20.0,
-                          profile_batches=4, max_new_tokens=8):
+                          profile_batches=4, max_new_tokens=8,
+                          json_path: str = "BENCH_traffic.json"):
     """Serving-engine scenario: Zipf-skewed expert popularity + Poisson
     (bursty) arrivals through the continuous-batching engine, each request
     *generating* ``max_new_tokens`` tokens through the incremental
@@ -192,7 +205,14 @@ def traffic_skewed_bursty(n_requests=24, seq=48, rate_hz=20.0,
     request latency, TTFT and time-per-output-token p50/p95
     (virtual-clock: queueing from arrivals, service from measured wall
     time), decode throughput, and the plan-cache reuse rate for `lina` vs
-    `uniform` scheduling."""
+    `uniform` scheduling.
+
+    The obs registry the engine publishes into supplies the TTFT
+    decomposition (queue / prefill / insert — summing to TTFT on the
+    completion clock) and the per-decode-occupancy step-time histograms
+    (the TPOT a request sees at that co-residency); both land in the rows
+    and in ``json_path`` alongside the admission ledger
+    (offered == completed + shed)."""
     cfg, params = _skewed_smoke(TRANSFORMER_XL, 16)
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq, global_batch=4,
                       seed=1)
@@ -201,9 +221,12 @@ def traffic_skewed_bursty(n_requests=24, seq=48, rate_hz=20.0,
         cfg, params, (ds.batch(i) for i in range(profile_batches)),
         path_len=3)
     rows = []
+    jpolicies = {}
     for policy in ("uniform", "lina"):
+        obs = ObsContext.disabled()      # fresh registry; spans off
         server = MoEServer(cfg, params, prof,
-                           ServerConfig(path_len=3, schedule_policy=policy))
+                           ServerConfig(path_len=3, schedule_policy=policy),
+                           obs=obs)
         engine = ServingEngine(server, EngineConfig(max_batch_tokens=4 * seq,
                                                     max_batch_requests=8))
         trace = poisson_zipf_trace(cfg, n_requests, seq, rate_hz, seed=7)
@@ -212,20 +235,75 @@ def traffic_skewed_bursty(n_requests=24, seq=48, rate_hz=20.0,
         wall = time.perf_counter() - t0
         m = summarize_results(results)
         loads = [s.device_load.max() for s in engine.layer_stats]
+        met = obs.metrics
+        breakdown = {
+            f"{phase}_{pct}_ms": _hist_ms(met, f"engine_ttft_{phase}_s",
+                                          q)
+            for phase in ("queue", "prefill", "insert")
+            for pct, q in (("p50", 0.50), ("p95", 0.95))}
+        tpot_occ = {}
+        for lk, h in sorted(met.series("engine_decode_step_s").items()):
+            occ = dict(lk).get("occupancy", "?")
+            tpot_occ[occ] = {"p50_ms": h.quantile(0.50) * 1e3,
+                             "p95_ms": h.quantile(0.95) * 1e3,
+                             "steps": h.count}
+        ledger = {
+            "offered": met.value("engine_requests_offered_total"),
+            "completed": met.value("engine_requests_completed_total"),
+            "shed": sum(c.value for c in
+                        met.series("engine_requests_shed_total").values()),
+        }
+        occ_cols = ",".join(
+            f"tpot_occ{occ}_p50_ms={v['p50_ms']:.1f}"
+            for occ, v in sorted(tpot_occ.items(), key=lambda kv: int(kv[0])))
         rows.append((
             f"traffic/txl-16e-{policy}", wall / max(len(results), 1) * 1e6,
             f"p50_ms={m['latency_p50']*1e3:.1f},"
             f"p95_ms={m['latency_p95']*1e3:.1f},"
             f"ttft_p50_ms={m['ttft_p50']*1e3:.1f},"
             f"ttft_p95_ms={m['ttft_p95']*1e3:.1f},"
+            f"ttft_queue_p50_ms={breakdown['queue_p50_ms']:.1f},"
+            f"ttft_prefill_p50_ms={breakdown['prefill_p50_ms']:.1f},"
+            f"ttft_insert_p50_ms={breakdown['insert_p50_ms']:.1f},"
             f"tpot_p50_ms={m['tpot_p50']*1e3:.1f},"
             f"tpot_p95_ms={m['tpot_p95']*1e3:.1f},"
+            f"{occ_cols},"
             f"gen_tok_s={m['gen_tok_s']:.1f},"
             f"plan_reuse={engine.plan_reuse_rate:.2f},"
             f"finetune_rate={engine.finetune_rate:.2f},"
             f"max_load={np.mean(loads):.3f},"
             f"replica_imb="
             f"{_replica_imbalance(engine.layer_stats, server.n_dev):.2f}"))
+        jpolicies[policy] = {
+            "wall_us_per_req": wall / max(len(results), 1) * 1e6,
+            "latency_p50_ms": m["latency_p50"] * 1e3,
+            "latency_p95_ms": m["latency_p95"] * 1e3,
+            "ttft_p50_ms": m["ttft_p50"] * 1e3,
+            "ttft_p95_ms": m["ttft_p95"] * 1e3,
+            "ttft_breakdown_ms": breakdown,
+            "tpot_p50_ms": m["tpot_p50"] * 1e3,
+            "tpot_p95_ms": m["tpot_p95"] * 1e3,
+            "tpot_by_occupancy": tpot_occ,
+            "gen_tok_s": m["gen_tok_s"],
+            "plan_reuse": engine.plan_reuse_rate,
+            "finetune_rate": engine.finetune_rate,
+            "ledger": ledger,
+            "ledger_closed":
+                ledger["offered"] == ledger["completed"] + ledger["shed"],
+        }
+    if not os.path.isabs(json_path):
+        json_path = os.path.join(REPO_ROOT, json_path)
+    with open(json_path, "w") as fh:
+        json.dump({
+            "model": "transformer-xl-16e(smoke)",
+            "trace": {"n_requests": n_requests, "seq": seq,
+                      "rate_hz": rate_hz, "max_new_tokens": max_new_tokens,
+                      "shape": "stationary-poisson+zipf-router"},
+            "ttft_identity": "queue + prefill + insert == ttft "
+                             "(completion clock; see repro.obs validate)",
+            "policies": jpolicies,
+        }, fh, indent=1)
+    rows.append(("traffic/json", 0.0, json_path))
     return rows
 
 

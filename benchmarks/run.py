@@ -33,7 +33,7 @@ SMOKE_KWARGS = {
     "table5": dict(batches=2, seq=32),
     "fig19": dict(batches=2, seq=32),
     "traffic": dict(n_requests=6, seq=16, rate_hz=50.0, profile_batches=2,
-                    max_new_tokens=4),
+                    max_new_tokens=4, json_path="BENCH_traffic.smoke.json"),
     # smoke rows go to a separate (gitignored) file so CI-sized runs never
     # clobber the committed full-run BENCH_kernels.json trajectory
     "kernels": dict(models=("gpt2",), tokens_per_expert=8, iters=1, scale=8,

@@ -25,6 +25,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.data import DataConfig, SyntheticLM
 from repro.models import lm as lm_mod
+from repro.obs import ObsContext
 from repro.runtime.engine import (EngineConfig, ServingEngine, simulate,
                                   summarize_results)
 from repro.runtime.server import MoEServer, ServerConfig, profile_from_training
@@ -97,6 +98,13 @@ def main(argv=None):
     ap.add_argument("--warmup", action="store_true",
                     help="pre-trace the (batch-bucket, min-replicas) "
                          "compile grid before serving")
+    ap.add_argument("--trace-dir", default=None,
+                    help="enable span tracing and export the artifact set "
+                         "(trace.json Chrome trace for Perfetto, spans.json, "
+                         "metrics.prom/.json) into this directory")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write a Prometheus-text metrics snapshot here "
+                         "(metrics are collected even without --trace-dir)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -125,10 +133,12 @@ def main(argv=None):
         cfg, params, (ds.batch(i) for i in range(args.profile_batches)),
         path_len=args.path_len)
 
+    obs = ObsContext.enabled() if args.trace_dir else ObsContext.disabled()
     server = MoEServer(cfg, params, prof,
                        ServerConfig(path_len=args.path_len,
                                     schedule_policy=args.policy,
-                                    plan_cache=not args.no_plan_cache))
+                                    plan_cache=not args.no_plan_cache),
+                       obs=obs)
     scheduler = None
     if args.autoscale:
         scheduler = AdaptiveScheduler(
@@ -186,6 +196,14 @@ def main(argv=None):
               f"bootstraps) over {rep['steps']} steps "
               f"({rep['churn_per_100_steps']:.1f} swaps/100 steps), "
               f"{scheduler.controller.migrated_slots} expert stacks moved")
+    if args.trace_dir:
+        paths = obs.export(args.trace_dir)
+        print(f"trace artifacts: {paths['trace']} (open in "
+              f"ui.perfetto.dev), {paths['spans']}, {paths['prom']}")
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            f.write(obs.metrics.to_prometheus())
+        print(f"metrics snapshot: {args.metrics_out}")
     return 0
 
 

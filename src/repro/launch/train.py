@@ -76,7 +76,17 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--metrics-out", default=None)
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the per-step metrics log (JSON rows)")
+    ap.add_argument("--trace-dir", default=None,
+                    help="enable span tracing and export the artifact set "
+                         "(trace.json Chrome trace for Perfetto, spans.json, "
+                         "metrics.prom/.json) into this directory")
+    ap.add_argument("--jax-profile-dir", default=None,
+                    help="capture a guarded jax.profiler trace window "
+                         "(steps 2..5) into this TensorBoard logdir — the "
+                         "device-time fwd/bwd split the host spans cannot "
+                         "see; degrades to a no-op when capture fails")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -106,20 +116,33 @@ def main(argv=None):
         from repro.launch.mesh import make_mesh
         dp_n, ep_n = (int(x) for x in args.mesh.split("x"))
         mesh = make_mesh((dp_n, ep_n), (axes.DATA, axes.MODEL))
-    trainer = Trainer(cfg, data_cfg, opt_cfg, tcfg, mesh=mesh)
+    from repro.obs import ObsContext, StepProfiler
+    obs = ObsContext.enabled() if args.trace_dir else ObsContext.disabled()
+    trainer = Trainer(cfg, data_cfg, opt_cfg, tcfg, mesh=mesh, obs=obs)
+    profiler = StepProfiler(args.jax_profile_dir) \
+        if args.jax_profile_dir else None
 
     def log(step, m):
+        if profiler is not None:
+            profiler.on_step(step)
         if step % tcfg.log_every == 0:
             print(f"step {step:5d}  loss {m['loss']:.4f}  "
                   f"aux {m['aux_loss']:.4f}  gnorm {m['grad_norm']:.3f}",
                   flush=True)
 
     trainer.run(on_step=log)
+    if profiler is not None:
+        profiler.close()
+        print(f"jax profiler logdir: {args.jax_profile_dir}")
     if trainer.packing_decision:
         print(f"expert packing: {trainer.packing_decision}")
     if args.metrics_out:
         with open(args.metrics_out, "w") as f:
             json.dump(trainer.metrics_log, f)
+    if args.trace_dir:
+        paths = obs.export(args.trace_dir)
+        print(f"trace artifacts: {paths['trace']} (open in "
+              f"ui.perfetto.dev), {paths['spans']}, {paths['prom']}")
     first, last = trainer.metrics_log[0]["loss"], trainer.metrics_log[-1]["loss"]
     print(f"loss {first:.4f} -> {last:.4f} over {args.steps} steps")
     return 0

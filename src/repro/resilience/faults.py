@@ -204,6 +204,11 @@ class FaultInjector:
         for f in self.schedule.starting(self.step):
             self.events[f.kind] = self.events.get(f.kind, 0) + 1
             self.fault_steps.setdefault(f.kind, []).append(self.step)
+            # the fired-fault ledger, mirrored into the operator registry
+            obs = getattr(engine, "obs", None)
+            if obs is not None:
+                obs.metrics.counter("faults_injected_total",
+                                    kind=f.kind).inc()
             if f.kind == "device_failure":
                 self.dead.add(f.device)
                 if self.resilience:

@@ -43,6 +43,8 @@ import numpy as np
 
 from repro.models.attention import KVCache
 from repro.models.lm import LMCache
+from repro.obs import ObsContext
+from repro.obs.tracer import Span
 from repro.runtime.server import LayerStats, MoEServer
 
 
@@ -150,7 +152,8 @@ class ServingEngine:
                  clock: Callable[[], float] = time.perf_counter,
                  scheduler=None,
                  service_model: Optional[Callable] = None,
-                 fault_injector=None):
+                 fault_injector=None,
+                 obs: Optional[ObsContext] = None):
         """``scheduler`` is an ``repro.sched.AdaptiveScheduler``: after each
         micro-batch the engine feeds it the step's LayerStats and served
         token count, and controller-published plans take effect from the
@@ -165,8 +168,25 @@ class ServingEngine:
 
         ``fault_injector`` is a ``repro.resilience.FaultInjector``: called
         at each step start (fault firing) and between the step's stats and
-        the scheduler (telemetry corruption)."""
+        the scheduler (telemetry corruption).
+
+        ``obs`` is a ``repro.obs.ObsContext``.  The serving stack shares
+        ONE context: passing it here also installs it on the server;
+        omitting it inherits the server's (so enabling tracing at either
+        end wires the whole stack)."""
         self.server = server
+        if obs is not None:
+            self.obs = obs
+            server.obs = obs
+            # a scheduler built before this engine captured the server's
+            # previous registry — re-point its bus at the shared one
+            bus = getattr(scheduler, "bus", None)
+            if bus is not None and bus.metrics is not None:
+                bus.metrics = obs.metrics
+        else:
+            self.obs = getattr(server, "obs", None) or ObsContext.disabled()
+        # open request-lifecycle spans by rid (tracer enabled only)
+        self._req_spans: Dict[int, Span] = {}
         self.ecfg = ecfg or EngineConfig()
         self.clock = clock
         self.scheduler = scheduler
@@ -209,21 +229,43 @@ class ServingEngine:
         (see ``simulate``'s retry-with-backoff client)."""
         if self.ecfg.max_queue and len(self._queue) >= self.ecfg.max_queue:
             self.n_rejected += 1
+            self.obs.metrics.counter("engine_requests_rejected_total").inc()
             return -1
         tokens = np.asarray(tokens).reshape(-1)
         rid = self._next_rid
         self._next_rid += 1
         self.n_submitted += 1
+        self.obs.metrics.counter("engine_requests_offered_total").inc()
         state = None if prev_rid is None else self.request_path_state(prev_rid)
         req = Request(rid, tokens,
                       self.clock() if arrival is None else arrival,
                       path_state=state, max_new_tokens=int(max_new_tokens))
         self._queue.append(req)
+        tr = self.obs.tracer
+        if tr.enabled:
+            root = tr.begin("request", start=req.arrival, rid=rid,
+                            n_tokens=int(tokens.shape[0]),
+                            max_new_tokens=int(max_new_tokens))
+            root.begin_child("queued", req.arrival)
+            self._req_spans[rid] = root
         return rid
 
     def record_shed(self, rid: int, arrival: float, time: float,
                     reason: str) -> None:
         self.shed_records.append(ShedRecord(rid, arrival, time, reason))
+        met = self.obs.metrics
+        met.counter("engine_requests_shed_total", reason=reason).inc()
+        if rid < 0:
+            # a give-up after retries never got an id, so it was never
+            # counted at submit — count it here to keep the ledger closed:
+            # offered == completed + shed
+            met.counter("engine_requests_offered_total").inc()
+        root = self._req_spans.pop(rid, None)
+        if root is not None:
+            for c in root.children:          # close the open queued phase
+                if c.name == "queued" and c.end != c.end:
+                    c.end_at(time)
+            root.end_at(time, outcome=f"shed:{reason}")
 
     def _shed_expired(self, now: float) -> None:
         """Deadline-based load shedding: drop QUEUED requests whose wait
@@ -334,25 +376,48 @@ class ServingEngine:
             return []
 
         self._step_stats = []
-        t0 = time.perf_counter()
-        dec_res = self._run_decodes(decodes) if decodes else None
-        pre_parts = self._run_prefills(prefills) if prefills else []
-        service = time.perf_counter() - t0
+        tr = self.obs.tracer
+        # Three measured service phases (the TTFT decomposition): time spent
+        # behind the decode batch is queueing, the prefill forward is
+        # prefill, and slot insertion / first-token argmax is insert.  The
+        # stopwatches always run (their sum is the service-time stamp);
+        # span recording rides on the explicit-timestamp layout below so
+        # spans land on the SAME clock as completions (virtual in replay).
+        with tr.timed("decode", record=False) as sw_dec:
+            dec_res = self._run_decodes(decodes) if decodes else None
+        with tr.timed("prefill", record=False) as sw_pre:
+            pre_parts = self._run_prefills(prefills) if prefills else []
         n_tokens = len(decodes) + sum(r.tokens.shape[0] for r in prefills)
+        extra = 0.0
+        if now is not None and self.service_model is not None:
+            extra = float(self.service_model(self._step_stats, n_tokens))
+
+        # Finish with a NaN placeholder stamp while the insert phase is
+        # still being measured (its wall time is part of the service that
+        # determines the stamp), then patch every stamp minted this step.
+        pending = float("nan")
+        out: List[RequestResult] = []
+        with tr.timed("insert", record=False) as sw_ins:
+            if dec_res is not None:
+                out.extend(self._finish_decodes(decodes, dec_res, pending))
+            for group, res in pre_parts:
+                out.extend(self._finish_prefills(group, res, pending))
+        service = sw_dec.dt + sw_pre.dt + sw_ins.dt
         if now is None:
             completion = self.clock()
         else:
-            completion = now + service * time_scale
-            if self.service_model is not None:
-                completion += float(
-                    self.service_model(self._step_stats, n_tokens))
+            completion = now + service * time_scale + extra
         self.last_step_end = completion
-
-        out: List[RequestResult] = []
-        if dec_res is not None:
-            out.extend(self._finish_decodes(decodes, dec_res, completion))
-        for group, res in pre_parts:
-            out.extend(self._finish_prefills(group, res, completion))
+        for r in out:
+            r.completion = completion
+            if r.ttft is not None and r.ttft != r.ttft:
+                r.ttft = completion          # first token minted this step
+        for slot in self._active.values():
+            if slot.ttft != slot.ttft:
+                slot.ttft = completion
+        scale = 1.0 if now is None else time_scale
+        self._observe_step(t_now, completion, scale, extra,
+                           (sw_dec.dt, sw_pre.dt), decodes, pre_parts, out)
         if self.scheduler is not None:
             # between micro-batches: feed telemetry, maybe publish plans —
             # they apply from the NEXT step, never mid-batch.  The injector
@@ -363,6 +428,81 @@ class ServingEngine:
                 stats = self.fault_injector.filter_stats(stats)
             self.scheduler.after_step(stats, n_tokens)
         return out
+
+    # --- observability ------------------------------------------------------
+    def _observe_step(self, t_now, completion, scale, extra, walls,
+                      decodes, pre_parts, out) -> None:
+        """Publish the step into the obs context: registry metrics always,
+        span trees only when the tracer is enabled.  Phase boundaries are
+        laid out on the completion clock (virtual during replay):
+        ``[t_now, t_dec_end, t_pre_end, completion]`` — so for a request
+        prefilled this step, queue + prefill + insert == TTFT exactly."""
+        wall_dec, wall_pre = walls
+        t_dec_end = t_now + wall_dec * scale
+        t_pre_end = t_dec_end + wall_pre * scale + extra
+        met = self.obs.metrics
+        met.counter("engine_steps_total").inc()
+        met.histogram("engine_step_service_s").observe(completion - t_now)
+        if decodes:
+            # TPOT by decode occupancy: the decode phase advances every
+            # in-flight request one token, so its duration IS this step's
+            # time-per-output-token at that occupancy
+            occ = self._bucket_rows(len(decodes))
+            met.histogram("engine_decode_step_s",
+                          occupancy=str(occ)).observe(t_dec_end - t_now)
+        prefilled = [r for group, _res in pre_parts for r in group]
+        for r in prefilled:
+            if r.max_new_tokens >= 1:
+                met.histogram("engine_ttft_s").observe(completion - r.arrival)
+                met.histogram("engine_ttft_queue_s").observe(
+                    t_dec_end - r.arrival)
+                met.histogram("engine_ttft_prefill_s").observe(
+                    t_pre_end - t_dec_end)
+                met.histogram("engine_ttft_insert_s").observe(
+                    completion - t_pre_end)
+        for r in out:
+            if r.tpot is not None:
+                met.histogram("engine_tpot_s").observe(r.tpot)
+        if out:
+            met.counter("engine_requests_completed_total").inc(len(out))
+        if self.obs.tracer.enabled:
+            self._trace_step(t_now, t_dec_end, t_pre_end, completion,
+                             decodes, prefilled, out)
+
+    def _trace_step(self, t_now, t_dec_end, t_pre_end, completion,
+                    decodes, prefilled, out) -> None:
+        """Span trees for one step: an ``engine.step`` root with the three
+        phase children, plus per-request lifecycle updates (decode-step
+        ticks, the queued→prefill→insert TTFT decomposition, completion)."""
+        tr = self.obs.tracer
+        sp = tr.add("engine.step", t_now, completion, step=self.step_idx,
+                    decodes=len(decodes), prefills=len(prefilled))
+        sp.child("decode", t_now, t_dec_end, n=len(decodes))
+        sp.child("prefill", t_dec_end, t_pre_end, n=len(prefilled))
+        sp.child("insert", t_pre_end, completion)
+        for slot in decodes:
+            root = self._req_spans.get(slot.rid)
+            if root is not None:
+                root.child("decode_step", t_now, t_dec_end,
+                           step=self.step_idx)
+        for r in prefilled:
+            root = self._req_spans.get(r.rid)
+            if root is None:
+                continue
+            for c in root.children:
+                if c.name == "queued" and c.end != c.end:
+                    c.end_at(t_dec_end)
+            root.child("prefill", t_dec_end, t_pre_end)
+            root.child("insert", t_pre_end, completion)
+            root.set(queue_s=t_dec_end - root.start,
+                     prefill_s=t_pre_end - t_dec_end,
+                     insert_s=completion - t_pre_end)
+            if r.max_new_tokens >= 1:
+                root.set(ttft_s=completion - root.start)
+        for r in out:
+            root = self._req_spans.pop(r.rid, None)
+            if root is not None:
+                root.end_at(completion, outcome="done")
 
     # --- decode phase -------------------------------------------------------
     def _run_decodes(self, slots: List[DecodeSlot]):

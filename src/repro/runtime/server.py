@@ -37,7 +37,6 @@ path + KV state).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass
 from functools import partial
 from typing import List, NamedTuple, Optional
@@ -60,6 +59,7 @@ from repro.models import lm as lm_mod
 from repro.models.attention import KVCache, attention, decode_attention
 from repro.models.layers import rms_norm
 from repro.models.lm import LMCache
+from repro.obs import ObsContext
 
 
 @dataclass
@@ -118,7 +118,8 @@ class DecodeResult(NamedTuple):
 
 class MoEServer:
     def __init__(self, cfg: ModelConfig, params, profile: PathProfile,
-                 scfg: Optional[ServerConfig] = None, mesh=None):
+                 scfg: Optional[ServerConfig] = None, mesh=None,
+                 obs: Optional[ObsContext] = None):
         assert cfg.moe.enabled, "MoEServer serves MoE architectures"
         scfg = scfg or ServerConfig()
         self.cfg = cfg
@@ -126,6 +127,9 @@ class MoEServer:
         self.profile = profile
         self.scfg = scfg
         self.mesh = mesh
+        # shared observability context: ``ServingEngine`` installs its own
+        # here when given one, so one flag traces the whole serving stack
+        self.obs = obs or ObsContext.disabled()
         self.n_dev = scfg.n_devices or cfg.moe.n_experts
         self.every = cfg.moe.every
         self.plan_cache = PlanCache(top_k=scfg.top_k) if scfg.plan_cache \
@@ -203,6 +207,9 @@ class MoEServer:
                     dead_devices=self.dead_devices)
         if rebuilt:
             self.degrade_stats["emergency_replans"] += len(rebuilt)
+            self.obs.metrics.counter(
+                "server_degrade_total",
+                kind="emergency_replan").inc(len(rebuilt))
             self.publish_plans(rebuilt)
 
     def revive_devices(self, devices) -> None:
@@ -358,6 +365,7 @@ class MoEServer:
         """Phase 1 (cache-aware) + phase 2.  Returns
         (plan, finetuned, accurate, reused)."""
         cfg, scfg = self.cfg, self.scfg
+        met = self.obs.metrics
         accurate = not needs_finetune(est, actual, scfg.top_k)
         reused = False
         finetuned = False
@@ -369,6 +377,7 @@ class MoEServer:
             # publish (the swap itself), True while the plan is live.
             fresh = li in self._override_fresh
             self._override_fresh.discard(li)
+            met.counter("server_plan_lookup_total", result="override").inc()
             return override, False, accurate, not fresh
         if scfg.schedule_policy == "uniform":
             # the uniform layout is static: look up before building so a
@@ -376,9 +385,13 @@ class MoEServer:
             uniform = np.full((cfg.moe.n_experts,),
                               1.0 / cfg.moe.n_experts, np.float32)
             if self.plan_cache is not None:
-                cached = self.plan_cache.lookup(li, uniform)
+                with self.obs.tracer.span("plan.lookup", layer=li):
+                    cached = self.plan_cache.lookup(li, uniform)
                 if cached is not None:
+                    met.counter("server_plan_lookup_total",
+                                result="hit").inc()
                     return cached, False, accurate, True
+            met.counter("server_plan_lookup_total", result="miss").inc()
             plan = identity_plan(cfg.moe.n_experts, self.n_dev,
                                  scfg.max_pack)
             if self.plan_cache is not None:
@@ -401,8 +414,11 @@ class MoEServer:
             basis, phase2 = est, False
         plan = None
         if self.plan_cache is not None:
-            plan = self.plan_cache.lookup(li, basis)
+            with self.obs.tracer.span("plan.lookup", layer=li):
+                plan = self.plan_cache.lookup(li, basis)
             reused = plan is not None
+        met.counter("server_plan_lookup_total",
+                    result="hit" if reused else "miss").inc()
         # a cache hit absorbs the phase-2 case: the blocking re-plan (the
         # paper's ~23% fine-tune cost) only happens when the basis drifted
         finetuned = phase2 and not reused
@@ -421,14 +437,21 @@ class MoEServer:
         fine-tunes for ``phase2_backoff`` plan calls.  Either event arms
         the backoff and bumps ``degrade_stats``."""
         scfg = self.scfg
-        t0 = time.perf_counter()
+        met = self.obs.metrics
+        # the watchdog stopwatch doubles as the phase-2 span: ``timed``
+        # always measures (the timeout decision is functional), and records
+        # a ``phase2.finetune`` / ``plan.build`` span when tracing is on
+        sw = self.obs.tracer.timed(
+            "phase2.finetune" if phase2 else "plan.build", layer=li)
         try:
-            if self.fault_hook is not None:
-                self.fault_hook("plan", li)
-            plan = plan_placement(basis, self.n_dev, scfg.max_pack,
-                                  dead_devices=self.dead_devices)
+            with sw:
+                if self.fault_hook is not None:
+                    self.fault_hook("plan", li)
+                plan = plan_placement(basis, self.n_dev, scfg.max_pack,
+                                      dead_devices=self.dead_devices)
         except Exception:
             self.degrade_stats["planner_errors"] += 1
+            met.counter("server_degrade_total", kind="planner_error").inc()
             self._phase2_suppress = max(self._phase2_suppress,
                                         scfg.phase2_backoff)
             try:
@@ -441,8 +464,9 @@ class MoEServer:
                     self.n_dev, max_pack=scfg.max_pack,
                     dead_devices=self.dead_devices)
         if phase2 and scfg.phase2_timeout_s > 0 and \
-                time.perf_counter() - t0 > scfg.phase2_timeout_s:
+                sw.dt > scfg.phase2_timeout_s:
             self.degrade_stats["phase2_timeouts"] += 1
+            met.counter("server_degrade_total", kind="phase2_timeout").inc()
             self._phase2_suppress = scfg.phase2_backoff
         return plan
 
@@ -458,44 +482,58 @@ class MoEServer:
         uniform cold-start estimate.  Returns (y [T, d], top1 [T], stats).
         """
         cfg, scfg = self.cfg, self.scfg
-        override = self._plan_override.get(li)
-        if override is not None:
-            # controller-owned layer: the plan's own popularity basis (the
-            # telemetry EWMA it was built from) stands in for the per-batch
-            # Ψ estimate — no per-token profile lookup on the hot path
-            est = np.asarray(override.popularity, np.float32)
-        elif scfg.schedule_policy == "uniform" or not scfg.use_estimation or \
-                (li < scfg.path_len and not has_state):
-            est = np.full((cfg.moe.n_experts,),
-                          1.0 / cfg.moe.n_experts, np.float32)
-        else:
-            est = self.profile.estimate_popularity(
-                li, path_ids[valid] if valid.any() else path_ids)
+        tr = self.obs.tracer
+        with tr.span("server.layer", layer=li) as lsp:
+            with tr.span("phase1.estimate"):
+                override = self._plan_override.get(li)
+                if override is not None:
+                    # controller-owned layer: the plan's own popularity basis
+                    # (the telemetry EWMA it was built from) stands in for
+                    # the per-batch Ψ estimate — no per-token profile lookup
+                    # on the hot path
+                    est = np.asarray(override.popularity, np.float32)
+                elif scfg.schedule_policy == "uniform" or \
+                        not scfg.use_estimation or \
+                        (li < scfg.path_len and not has_state):
+                    est = np.full((cfg.moe.n_experts,),
+                                  1.0 / cfg.moe.n_experts, np.float32)
+                else:
+                    est = self.profile.estimate_popularity(
+                        li, path_ids[valid] if valid.any() else path_ids)
 
-        _, idx = self._gate(gp.moe.router, h2)
-        top1 = np.asarray(idx[:, 0])
-        actual = np.bincount(top1, weights=valid.astype(np.float64),
-                             minlength=cfg.moe.n_experts)
-        actual = actual / max(actual.sum(), 1.0)
+            with tr.span("gate"):
+                _, idx = self._gate(gp.moe.router, h2)
+                top1 = np.asarray(idx[:, 0])
+                actual = np.bincount(top1, weights=valid.astype(np.float64),
+                                     minlength=cfg.moe.n_experts)
+                actual = actual / max(actual.sum(), 1.0)
 
-        plan, finetuned, accurate, reused = self._plan_layer(li, est, actual)
+            plan, finetuned, accurate, reused = self._plan_layer(li, est,
+                                                                 actual)
 
-        # dispatch under the final plan (distributed path); capacity sized
-        # from valid tokens, not the padded batch
-        cap = self._valid_capacity(int(valid.sum()), h2.shape[0])
-        min_rep = int(plan.n_replicas.min())
-        se, ro, nr, rw = self._plan_device(plan)
-        y = self._dispatch(gp.moe, h2, se, ro, nr, rw,
-                           min_replicas=min_rep, cap=cap)
+            with tr.span("dispatch"):
+                # dispatch under the final plan (distributed path); capacity
+                # sized from valid tokens, not the padded batch
+                cap = self._valid_capacity(int(valid.sum()), h2.shape[0])
+                min_rep = int(plan.n_replicas.min())
+                se, ro, nr, rw = self._plan_device(plan)
+                y = self._dispatch(gp.moe, h2, se, ro, nr, rw,
+                                   min_replicas=min_rep, cap=cap)
 
-        # host mirror of the replica split: realized valid-token count per
-        # (device, sub-slot) — what the telemetry bus/controller observes
-        # as post-routing imbalance
-        rep_load = replica_token_counts(
-            np.asarray(idx), self._host_plan(plan), cap,
-            slot_capacity(cap, min_rep), valid=valid,
-            dp_shards=dp_shard_count(self.mesh, h2.shape[0]),
-            route_mode=scfg.route_mode)
+                # host mirror of the replica split: realized valid-token
+                # count per (device, sub-slot) — what the telemetry
+                # bus/controller observes as post-routing imbalance
+                rep_load = replica_token_counts(
+                    np.asarray(idx), self._host_plan(plan), cap,
+                    slot_capacity(cap, min_rep), valid=valid,
+                    dp_shards=dp_shard_count(self.mesh, h2.shape[0]),
+                    route_mode=scfg.route_mode)
+            lsp.set(finetuned=finetuned, reused=reused, accurate=accurate)
+
+        met = self.obs.metrics
+        met.counter("server_layers_served_total").inc()
+        if finetuned:
+            met.counter("server_phase2_finetunes_total").inc()
 
         # loads are always evaluated against the ACTUAL popularity — the
         # plan decides placement, the workload decides load

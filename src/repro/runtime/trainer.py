@@ -19,7 +19,6 @@ Production behaviors exercised here (and in tests):
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field, replace
 from typing import Callable, Optional
 
@@ -27,6 +26,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
+from repro.obs import ObsContext
 from repro.configs.base import ModelConfig
 from repro.core.packing import choose_packing
 from repro.data import DataConfig, SyntheticLM
@@ -80,7 +80,9 @@ class TrainerConfig:
 
 class Trainer:
     def __init__(self, model_cfg: ModelConfig, data_cfg: DataConfig,
-                 opt_cfg: AdamWConfig, cfg: TrainerConfig, mesh=None):
+                 opt_cfg: AdamWConfig, cfg: TrainerConfig, mesh=None,
+                 obs: Optional[ObsContext] = None):
+        self.obs = obs or ObsContext.disabled()
         moe_over = {k: v for k, v in (("n_microops", cfg.n_microops),
                                       ("pipeline_ffn", cfg.pipeline_ffn),
                                       ("shortcut", cfg.shortcut))
@@ -133,63 +135,79 @@ class Trainer:
 
         times: list = []
         consec_bad = 0
+        tr = self.obs.tracer
+        met = self.obs.metrics
+        sched_name = self.cfg.schedule or "implicit"
         for step in range(start_step, self.cfg.steps):
             if self.cfg.fail_at_step is not None and step == self.cfg.fail_at_step:
                 raise RuntimeError(f"injected failure at step {step}")
-            batch = {k: jax.numpy.asarray(v)
-                     for k, v in self.dataset.batch(step).items()}
-            t0 = time.perf_counter()
-            if self.stateful_reduce:
-                params, opt_state, m, rstate = self.step_fn(
-                    state["params"], state["opt_state"], batch,
-                    state["reduce_state"])
-            else:
-                params, opt_state, m = self.step_fn(state["params"],
-                                                    state["opt_state"], batch)
-            m = {k: float(v) for k, v in m.items()}
-            if step in (self.cfg.nan_at_steps or ()):
-                m = dict(m, loss=float("nan"))       # injected divergence
-            dt = time.perf_counter() - t0
-            # --- non-finite guard: a diverged step must not commit ---------
-            if self.cfg.max_bad_steps and \
-                    not all(np.isfinite(v) for v in m.values()):
-                self.skipped_steps.append(step)
+            with tr.span("train.step", step=step,
+                         schedule=sched_name) as ssp:
+                with tr.span("data.batch"):
+                    batch = {k: jax.numpy.asarray(v)
+                             for k, v in self.dataset.batch(step).items()}
+                # fwd+bwd+update runs as ONE jitted call — the host-side
+                # span carries the schedule attribution; the true device
+                # split lives in a jax.profiler capture (obs.StepProfiler)
+                with tr.timed("fwd_bwd", schedule=sched_name) as sw:
+                    if self.stateful_reduce:
+                        params, opt_state, m, rstate = self.step_fn(
+                            state["params"], state["opt_state"], batch,
+                            state["reduce_state"])
+                    else:
+                        params, opt_state, m = self.step_fn(
+                            state["params"], state["opt_state"], batch)
+                    m = {k: float(v) for k, v in m.items()}
+                if step in (self.cfg.nan_at_steps or ()):
+                    m = dict(m, loss=float("nan"))   # injected divergence
+                dt = sw.dt
+                met.counter("trainer_steps_total").inc()
+                met.histogram("trainer_step_s").observe(dt)
+                # --- non-finite guard: a diverged step must not commit -----
+                if self.cfg.max_bad_steps and \
+                        not all(np.isfinite(v) for v in m.values()):
+                    self.skipped_steps.append(step)
+                    self.metrics_log.append({"step": step, **m, "dt": dt,
+                                             "skipped": True})
+                    met.counter("trainer_skipped_steps_total").inc()
+                    ssp.set(skipped=True)
+                    consec_bad += 1
+                    if consec_bad >= self.cfg.max_bad_steps:
+                        _, rb_state = self.ckpt.restore_latest(state)
+                        if rb_state is not None:
+                            state = rb_state
+                            self.rollbacks += 1
+                            met.counter("trainer_rollbacks_total").inc()
+                            ssp.set(rollback=True)
+                        consec_bad = 0
+                    continue     # params/opt_state keep pre-step values
+                consec_bad = 0
+                state = {"params": params, "opt_state": opt_state}
+                if self.stateful_reduce:
+                    state["reduce_state"] = rstate
+                times.append(dt)
+                med = float(np.median(times[-20:]))
+                if len(times) > 5 and dt > self.cfg.straggler_factor * med:
+                    self.straggler_events.append({"step": step, "dt": dt,
+                                                  "median": med})
+                    met.counter("trainer_straggler_events_total").inc()
+                # per-schedule step time: the measured ablation keys on
+                # this; overlap knobs logged alongside so ablations over
+                # n_microops/pipeline/shortcut are attributable per step
+                moe = self.model_cfg.moe
                 self.metrics_log.append({"step": step, **m, "dt": dt,
-                                         "skipped": True})
-                consec_bad += 1
-                if consec_bad >= self.cfg.max_bad_steps:
-                    _, rb_state = self.ckpt.restore_latest(state)
-                    if rb_state is not None:
-                        state = rb_state
-                        self.rollbacks += 1
-                    consec_bad = 0
-                continue         # params/opt_state keep pre-step values
-            consec_bad = 0
-            state = {"params": params, "opt_state": opt_state}
-            if self.stateful_reduce:
-                state["reduce_state"] = rstate
-            times.append(dt)
-            med = float(np.median(times[-20:]))
-            if len(times) > 5 and dt > self.cfg.straggler_factor * med:
-                self.straggler_events.append({"step": step, "dt": dt,
-                                              "median": med})
-            # per-schedule step time: the measured ablation keys on this;
-            # overlap knobs logged alongside so ablations over
-            # n_microops/pipeline/shortcut are attributable per step
-            moe = self.model_cfg.moe
-            self.metrics_log.append({"step": step, **m, "dt": dt,
-                                     "schedule": self.cfg.schedule or
-                                     "implicit",
-                                     "n_microops": moe.n_microops,
-                                     "pipeline_ffn": moe.pipeline_ffn,
-                                     "shortcut": moe.shortcut})
-            if step == self.cfg.pack_warmup and self.model_cfg.moe.enabled:
-                self._decide_packing()
-            if on_step:
-                on_step(step, m)
-            if (step + 1) % self.cfg.ckpt_every == 0 or \
-                    step + 1 == self.cfg.steps:
-                self.ckpt.save(step + 1, state)
+                                         "schedule": sched_name,
+                                         "n_microops": moe.n_microops,
+                                         "pipeline_ffn": moe.pipeline_ffn,
+                                         "shortcut": moe.shortcut})
+                if step == self.cfg.pack_warmup and self.model_cfg.moe.enabled:
+                    self._decide_packing()
+                if on_step:
+                    on_step(step, m)
+                if (step + 1) % self.cfg.ckpt_every == 0 or \
+                        step + 1 == self.cfg.steps:
+                    with tr.span("checkpoint", step=step + 1):
+                        self.ckpt.save(step + 1, state)
         return state
 
     def _decide_packing(self):

@@ -267,7 +267,11 @@ class AdaptiveScheduler:
                 top_k=server.scfg.top_k,
                 bytes_per_token=float(server.cfg.d_model * itemsize))
         self.server = server
-        self.bus = TelemetryBus(tcfg)
+        # the operator view rides the server's shared obs registry; the bus
+        # itself stays the policy view the controller plans from
+        obs = getattr(server, "obs", None)
+        self.bus = TelemetryBus(tcfg,
+                                metrics=None if obs is None else obs.metrics)
         self.controller = AutoscaleController(server.n_dev,
                                               max_pack=server.scfg.max_pack,
                                               cfg=ccfg)
@@ -292,6 +296,9 @@ class AdaptiveScheduler:
             plans = None
         if plans:
             self.server.publish_plans(plans)
+            if self.bus.metrics is not None:
+                self.bus.metrics.counter(
+                    "sched_plan_swaps_total").inc(len(plans))
             return True
         return False
 

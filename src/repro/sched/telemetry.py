@@ -79,10 +79,16 @@ class LayerTelemetry:
 
 
 class TelemetryBus:
-    """Collects per-layer serving metrics; the controller reads snapshots."""
+    """Collects per-layer serving metrics; the controller reads snapshots.
 
-    def __init__(self, cfg: Optional[TelemetryConfig] = None):
+    The bus remains the scheduling-POLICY view (EWMAs the controller plans
+    from).  Pass a ``repro.obs.MetricsRegistry`` as ``metrics`` to also
+    publish the operator view: drift/imbalance gauges per layer, cache-rate
+    gauges, and the error ledger as labeled counters."""
+
+    def __init__(self, cfg: Optional[TelemetryConfig] = None, metrics=None):
         self.cfg = cfg or TelemetryConfig()
+        self.metrics = metrics
         self._layers: Dict[int, LayerTelemetry] = {}
         self._cache_last = (0, 0, 0)      # (hits, misses, invalidations)
         self.cache_rates = {"hit": 0.0, "miss": 0.0, "invalidation": 0.0}
@@ -96,6 +102,8 @@ class TelemetryBus:
         ``telemetry_rejected``) — the observability half of exception
         isolation: degraded, but never silent."""
         self.errors[kind] = self.errors.get(kind, 0) + 1
+        if self.metrics is not None:
+            self.metrics.counter("sched_bus_errors_total", kind=kind).inc()
 
     @staticmethod
     def _valid_obs(pop: np.ndarray, load: np.ndarray) -> bool:
@@ -162,6 +170,13 @@ class TelemetryBus:
             lt.steps += 1
             lt.finetunes += int(s.finetuned)
             lt.reuses += int(s.plan_reused)
+            if self.metrics is not None:
+                g = self.metrics.gauge
+                lab = str(int(s.layer))
+                g("sched_drift_rate", layer=lab).set(lt.drift_rate)
+                g("sched_device_imbalance", layer=lab).set(lt.imbalance)
+                g("sched_replica_imbalance",
+                  layer=lab).set(lt.replica_imbalance)
 
     def observe_cache(self, stats) -> None:
         """Fold a PlanCacheStats snapshot into hit/miss/invalidation rates
@@ -177,6 +192,10 @@ class TelemetryBus:
             for key, val in zip(("hit", "miss", "invalidation"),
                                 (d[0] / total, d[1] / total, d[2] / total)):
                 self.cache_rates[key] += a * (val - self.cache_rates[key])
+        if self.metrics is not None:
+            for key, val in self.cache_rates.items():
+                self.metrics.gauge("sched_plan_cache_rate",
+                                   outcome=key).set(val)
 
     # --- reading ------------------------------------------------------------
     def layers(self) -> List[int]:

@@ -1,0 +1,316 @@
+"""Unified observability layer (repro.obs): span-tree invariants, the
+TTFT = queue + prefill + insert identity on a real engine run (including
+the Chrome-trace export round-trip the validator gates in CI), the
+disabled fast path (no span allocation, bounded overhead), histogram
+quantile accuracy against exact quantiles, the Prometheus text
+round-trip, the admission ledger read back through the metrics view, and
+the overlap attribution replay against BENCH_schedules.json."""
+import json
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.popularity import PathProfile
+from repro.obs import (Histogram, MetricsRegistry, NOOP, ObsContext, Tracer,
+                       attribute_overlap, check_span_tree, hidden_fraction,
+                       parse_prometheus, to_chrome, tree_from_chrome)
+from repro.obs.__main__ import check_ledger, check_request_ttft
+from repro.obs.__main__ import main as obs_validate
+from repro.models import lm as lm_mod
+from repro.runtime.engine import EngineConfig, ServingEngine, simulate
+from repro.runtime.server import MoEServer, ServerConfig
+from repro.sched import get_trace
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# --- tracer core ------------------------------------------------------------
+
+class _FakeClock:
+    """Deterministic monotonic clock: each read advances by ``tick``."""
+
+    def __init__(self, tick=1.0):
+        self.t = 0.0
+        self.tick = tick
+
+    def __call__(self):
+        self.t += self.tick
+        return self.t
+
+
+def test_span_tree_invariants_catch_violations():
+    tr = Tracer(enabled=True)
+    ok = tr.begin("step", start=0.0)
+    ok.child("a", 0.0, 0.4)
+    ok.child("b", 0.4, 0.9)
+    ok.end_at(1.0)
+    assert check_span_tree(tr.roots) == []
+
+    overlapping = tr.begin("step2", start=0.0)
+    overlapping.child("x", 0.0, 0.8)
+    overlapping.child("y", 0.2, 0.9)           # phases overlap: sum 1.5 > 1.0
+    overlapping.end_at(1.0)
+    errs = check_span_tree(tr.roots)
+    assert any("sum" in e for e in errs)
+
+    tr.clear()
+    escape = tr.begin("step3", start=0.0)
+    escape.child("z", 0.0, 2.0)                # child past parent end
+    escape.end_at(1.0)
+    tr.begin("never_closed", start=0.0)        # left open
+    errs = check_span_tree(tr.roots)
+    assert any("escapes" in e for e in errs)
+    assert any("open span" in e for e in errs)
+
+
+def test_stack_spans_nest_and_add_lands_under_open_span():
+    tr = Tracer(enabled=True, clock=_FakeClock())
+    with tr.span("outer", layer=3) as outer:
+        with tr.span("inner"):
+            pass
+        tr.add("manual", outer.start + 0.1, outer.start + 0.2, tag="m")
+    assert len(tr.roots) == 1
+    assert [c.name for c in tr.roots[0].children] == ["inner", "manual"]
+    assert tr.roots[0].attrs == {"layer": 3}
+    assert check_span_tree(tr.roots) == []
+    # outside any open span, add() becomes a root
+    tr.add("rootish", 100.0, 101.0)
+    assert tr.roots[-1].name == "rootish"
+
+
+def test_disabled_tracer_allocates_no_spans():
+    tr = Tracer(enabled=False)
+    assert tr.span("s") is NOOP
+    assert tr.begin("s") is NOOP
+    assert tr.add("s", 0.0, 1.0) is NOOP
+    with tr.span("s", layer=1) as sp:
+        assert sp is NOOP
+        assert sp.set(a=1) is NOOP
+        assert sp.begin_child("c", 0.0) is NOOP
+        assert sp.child("c", 0.0, 1.0).end_at(2.0) is NOOP
+    assert tr.roots == [] and tr._stack == []
+    # the stopwatch still measures (its dt is functional), but records nothing
+    with tr.timed("sw") as sw:
+        pass
+    assert sw.dt >= 0.0
+    assert tr.roots == []
+
+
+def test_root_cap_counts_drops_instead_of_silently_capping():
+    tr = Tracer(enabled=True, max_roots=2)
+    for i in range(5):
+        tr.add(f"r{i}", float(i), float(i) + 0.5)
+    assert len(tr.roots) == 2
+    assert tr.dropped_roots == 3
+
+
+# --- metrics ----------------------------------------------------------------
+
+def test_histogram_quantiles_match_exact_within_bucket_resolution():
+    rng = np.random.RandomState(0)
+    xs = rng.lognormal(mean=-5.0, sigma=1.2, size=5000)   # ~ms-scale latencies
+    h = Histogram()
+    for x in xs:
+        h.observe(float(x))
+    assert h.count == xs.size
+    np.testing.assert_allclose(h.sum, xs.sum(), rtol=1e-9)
+    for q in (0.50, 0.95, 0.99):
+        exact = float(np.quantile(xs, q))
+        got = h.quantile(q)
+        # default buckets are 4/octave: ~19% relative resolution
+        assert abs(got - exact) / exact < 0.20, (q, got, exact)
+    assert Histogram().quantile(0.5) != Histogram().quantile(0.5)  # NaN
+
+
+def test_prometheus_round_trip_is_sample_exact():
+    reg = MetricsRegistry()
+    reg.counter("reqs_total", policy="lina").inc(3)
+    reg.counter("reqs_total", policy="uniform").inc()
+    reg.gauge("queue_depth").set(2.5)
+    h = reg.histogram("lat_s", policy="lina")
+    for v in (1e-4, 3e-4, 2e-3, 0.5, 2000.0):              # incl. overflow
+        h.observe(v)
+    text = reg.to_prometheus()
+    assert parse_prometheus(text) == reg.to_samples()
+    # the le label is emitted sorted in with the user labels, and the
+    # overflow observation lands in the +Inf bucket
+    assert 'lat_s_bucket{le="+Inf",policy="lina"} 5' in text
+    with pytest.raises(TypeError):
+        reg.gauge("reqs_total")                            # type collision
+
+
+# --- engine runs ------------------------------------------------------------
+
+def _smoke_stack(obs, capacity_factor=16.0, **ecfg_kw):
+    import dataclasses
+    import jax
+    cfg = get_config("gpt2-moe").smoke()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe,
+                                     capacity_factor=capacity_factor))
+    params = lm_mod.init_params(cfg, jax.random.PRNGKey(0))
+    prof = PathProfile(n_layers=cfg.n_moe_layers,
+                       n_experts=cfg.moe.n_experts, path_len=2)
+    server = MoEServer(cfg, params, prof,
+                       ServerConfig(path_len=2, schedule_policy="lina"),
+                       obs=obs)
+    eng = ServingEngine(server, EngineConfig(max_batch_tokens=64,
+                                             max_batch_requests=4,
+                                             **ecfg_kw))
+    return cfg, eng
+
+
+@pytest.fixture(scope="module")
+def traced_drift_run(tmp_path_factory):
+    """One drift-workload engine run with tracing enabled, exported."""
+    obs = ObsContext.enabled()
+    cfg, eng = _smoke_stack(obs)
+    trace = get_trace("drift", cfg.vocab_size, n_requests=6, seq=8,
+                      rate_hz=50.0, seed=3)
+    results = simulate(eng, trace, max_new_tokens=3)
+    out = str(tmp_path_factory.mktemp("obs_drift"))
+    paths = obs.export(out)
+    return obs, eng, results, out, paths
+
+
+def test_ttft_identity_holds_on_drift_run(traced_drift_run):
+    obs, eng, results, _out, _paths = traced_drift_run
+    assert len(results) == 6
+    spans = obs.tracer.roots
+    assert check_span_tree(spans) == []
+    errs, n = check_request_ttft(spans, tol=1e-6)
+    assert errs == [] and n == 6
+    # the span-tree TTFT agrees with the engine's own result objects
+    by_rid = {r.rid: r for r in results}
+    for root in spans:
+        if root.name != "request" or "ttft_s" not in root.attrs:
+            continue
+        r = by_rid[root.attrs["rid"]]
+        assert abs(root.attrs["ttft_s"] - r.ttft_latency) < 1e-9
+        assert root.attrs["outcome"] == "done"
+    # ... and with the registry histograms the benchmark columns read
+    h = obs.metrics.get("engine_ttft_s")
+    assert h is not None and h.count == 6
+
+
+def test_chrome_export_round_trips_the_decomposition(traced_drift_run):
+    obs, _eng, _results, out, paths = traced_drift_run
+    with open(paths["trace"]) as f:
+        chrome = json.load(f)
+    assert chrome["traceEvents"], "empty Chrome trace"
+    trees = tree_from_chrome(chrome)
+    errs, n = check_request_ttft(trees, tol=1e-5)
+    assert errs == [] and n == 6
+    # the CLI validator (the CI gate) passes on the exported artifact set
+    assert obs_validate(["validate", "--trace-dir", out,
+                         "--require-requests", "6"]) == 0
+
+
+def test_engine_step_spans_carry_phase_children(traced_drift_run):
+    obs, _eng, _results, _out, _paths = traced_drift_run
+    steps = [r for r in obs.tracer.roots if r.name == "engine.step"]
+    assert steps
+    for st in steps:
+        names = {c.name for c in st.children}
+        assert names <= {"decode", "prefill", "insert"}
+    assert any("decode" in {c.name for c in st.children} for st in steps)
+
+
+@pytest.fixture(scope="module")
+def untraced_run():
+    """The same engine path with the default (tracing-off) context."""
+    obs = ObsContext.disabled()
+    cfg, eng = _smoke_stack(obs)
+    rng = np.random.RandomState(5)
+    trace = [(rng.randint(0, cfg.vocab_size, (8,)), 0.02 * i)
+             for i in range(6)]
+    results = simulate(eng, trace, max_new_tokens=3)
+    return obs, eng, results
+
+
+def test_disabled_run_allocates_no_spans_but_keeps_metrics(untraced_run):
+    obs, eng, results = untraced_run
+    assert len(results) == 6
+    assert obs.tracer.roots == []
+    assert eng._req_spans == {}
+    # the ledgers stay live: metrics are always on
+    assert obs.metrics.value("engine_requests_offered_total") == 6
+    assert obs.metrics.value("engine_requests_completed_total") == 6
+    assert obs.metrics.get("engine_ttft_queue_s").count == 6
+
+
+def test_disabled_tracing_overhead_within_2pct(untraced_run):
+    """The per-call cost of a disabled span, times a generous bound on
+    obs calls per engine step, must stay under 2% of a measured step's
+    service time — the guard that keeps production serving free to leave
+    tracing off-by-default without a perf tax."""
+    obs, _eng, _results = untraced_run
+    tr = Tracer(enabled=False)
+    n = 20_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with tr.span("s", layer=0):
+            pass
+    per_call = (time.perf_counter() - t0) / n
+    step_h = obs.metrics.get("engine_step_service_s")
+    assert step_h is not None and step_h.count > 0
+    mean_step = step_h.sum / step_h.count
+    calls_per_step = 64          # ~25 in reality (engine 3 + 5/MoE layer)
+    assert per_call * calls_per_step < 0.02 * mean_step, \
+        (per_call, mean_step)
+
+
+def test_admission_ledger_closes_through_metrics_view():
+    obs = ObsContext.disabled()
+    cfg, eng = _smoke_stack(obs, max_queue=1)
+    rng = np.random.RandomState(9)
+    # a same-instant burst against a depth-1 queue: most submits bounce,
+    # and with no retry budget the client records give-ups on the ledger
+    trace = [(rng.randint(0, cfg.vocab_size, (8,)), 0.0) for _ in range(8)]
+    results = simulate(eng, trace, max_new_tokens=2, retry_backoff_s=0.0)
+    assert eng.shed_records                    # some traffic was refused
+    samples = parse_prometheus(obs.metrics.to_prometheus())
+    assert check_ledger(samples) == []
+    offered = samples["engine_requests_offered_total"]
+    completed = samples["engine_requests_completed_total"]
+    shed = sum(v for k, v in samples.items()
+               if k.startswith("engine_requests_shed_total"))
+    assert shed == len(eng.shed_records) > 0
+    assert offered == completed + shed == len(trace)
+    assert completed == len(results)
+
+
+# --- overlap attribution ----------------------------------------------------
+
+def test_overlap_attribution_matches_bench_json():
+    """hidden_fraction recomputed FROM THE TRACE must equal each
+    BENCH_schedules.json overlap row's a2a_hidden_frac — and survive a
+    Chrome export round-trip (the acceptance identity of the obs layer)."""
+    with open(os.path.join(REPO_ROOT, "BENCH_schedules.json")) as f:
+        rows = json.load(f)["overlap"]
+    assert rows, "BENCH_schedules.json has no overlap rows"
+    tr = Tracer(enabled=True)
+    roots = attribute_overlap(tr, rows)
+    assert len(roots) == len(rows)
+    assert check_span_tree(tr.roots) == []
+    for root, row in zip(roots, rows):
+        # rows store values printed at 0.1us so allow that quantization
+        assert abs(hidden_fraction(root) - row["a2a_hidden_frac"]) < 0.01
+    trees = tree_from_chrome(to_chrome(tr))
+    assert len(trees) == len(rows)
+    for tree, row in zip(trees, rows):
+        assert abs(hidden_fraction(tree) - row["a2a_hidden_frac"]) < 0.01
+
+
+def test_attribution_on_a_disabled_tracer_is_empty():
+    tr = Tracer(enabled=False)
+    rows = [{"variant": "pipelined", "chunks_requested": 2,
+             "chunks_chosen": 2, "us_per_call": 150.0, "serial_us": 200.0,
+             "a2a_us": 100.0, "a2a_hidden_frac": 0.5}]
+    roots = attribute_overlap(tr, rows)
+    assert tr.roots == []
+    assert all(r is NOOP for r in roots)
+    assert hidden_fraction(NOOP) == 0.0
